@@ -1,0 +1,63 @@
+"""Shared benchmark infrastructure: dataset, trained models, timing."""
+
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as B
+from repro.core import cascade as C
+from repro.core import losses as L
+from repro.core import metrics as M
+from repro.core import trainer as T
+from repro.data import generate_log, LogConfig
+
+BASE_COST = None  # set by table3
+
+
+@lru_cache(maxsize=1)
+def bench_log():
+    """The offline benchmark dataset (paper: 2M instances; scaled to run in
+    CI: ~40k instances, same structure)."""
+    return generate_log(LogConfig(n_queries=1200, items_per_query=64, seed=42))
+
+
+@lru_cache(maxsize=1)
+def bench_split():
+    return bench_log().split(0.8, seed=0)
+
+
+@lru_cache(maxsize=8)
+def trained_cloes(beta: float = 5.0, delta: float = 1.0,
+                  eps_latency: float = 0.05, eps_purchase: float = 1.0,
+                  mu_price: float = 1.0, loss: str = "l3",
+                  cost_mask_positives: bool = False,
+                  latency_scale: float | None = None):
+    tr, _ = bench_split()
+    kw = {} if latency_scale is None else {"latency_scale": latency_scale}
+    lcfg = L.LossConfig(beta=beta, delta=delta, eps_latency=eps_latency,
+                        eps_purchase=eps_purchase, mu_price=mu_price,
+                        cost_mask_positives=cost_mask_positives, **kw)
+    params, cfg = B.fit_cloes(
+        tr, lcfg=lcfg, tcfg=T.TrainConfig(loss=loss, epochs=6, lr=0.01))
+    return params, cfg, lcfg
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time in microseconds of a jax callable (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,74 @@
+"""Paper Fig 3: rank-stage latency when CLOES is uninstalled (switched back
+to the 2-stage heuristic), in two steps (gray test, then full switch), on
+two independent clusters.
+
+We simulate the two clusters as two disjoint halves of the query stream and
+report the latency time series; the reproduced claim is the two-step rise
+(~17ms -> ~21ms in the paper; our units follow the Eq-16 latency model)."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_split, emit, trained_cloes
+from repro.core import losses as L
+
+
+def _latency(params, cfg, lcfg, te, idx):
+    x = jnp.asarray(te.x[idx], jnp.float32)
+    q = jnp.asarray(te.q[idx], jnp.float32)
+    mask = jnp.asarray(te.mask[idx], jnp.float32)
+    m_q = jnp.asarray(te.m_q[idx], jnp.float32)
+    return np.asarray(L.expected_latency_per_query(params, cfg, lcfg, x, q,
+                                                   mask, m_q))
+
+
+def _two_stage_latency(te, idx, keep=6000):
+    from repro.data import features as F
+    lcfg = L.LossConfig()
+    m_q = te.m_q[idx]
+    lat = (F.FEATURE_COSTS[F.FEATURE_NAMES.index("sales_volume")] * m_q
+           + (F.FEATURE_COSTS.sum() - 0.02) * np.minimum(keep, m_q))
+    return lcfg.latency_scale * lat
+
+
+def run():
+    _, te = bench_split()
+    t0 = time.perf_counter()
+    params, cfg, lcfg = trained_cloes(beta=5.0)
+    rng = np.random.default_rng(0)
+    n = te.x.shape[0]
+    halves = [np.arange(n)[::2], np.arange(n)[1::2]]     # two "clusters"
+    series = {0: [], 1: []}
+    for step in range(30):                                # 30 time ticks
+        for c, idx in enumerate(halves):
+            sample = rng.choice(idx, size=min(len(idx), 128), replace=False)
+            if step < 10:         # CLOES fully on
+                frac_2stage = 0.0
+            elif step < 20:       # gray test: small portion switched
+                frac_2stage = 0.3
+            else:                 # fully uninstalled
+                frac_2stage = 1.0
+            lat_c = _latency(params, cfg, lcfg, te, sample)
+            lat_2 = _two_stage_latency(te, sample)
+            mix = rng.random(len(sample)) < frac_2stage
+            series[c].append(float(np.where(mix, lat_2, lat_c).mean()))
+    elapsed = (time.perf_counter() - t0) * 1e6
+    for c in (0, 1):
+        s = series[c]
+        emit(f"fig3/cluster{c}", elapsed / 2,
+             f"cloes_on={np.mean(s[:10]):.1f}ms;gray={np.mean(s[10:20]):.1f}ms;"
+             f"off={np.mean(s[20:]):.1f}ms;paper=17_to_21ms")
+        assert np.mean(s[:10]) < np.mean(s[10:20]) < np.mean(s[20:]), \
+            "two-step latency rise when uninstalling CLOES (Fig 3)"
+    saved = 1 - np.mean(series[0][:10] + series[1][:10]) / \
+        np.mean(series[0][20:] + series[1][20:])
+    emit("fig3/latency_saved", elapsed, f"frac={saved:.2f};paper=~0.20")
+    return series
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Paper Fig 5 / §5.4: Singles' Day peak load. Search traffic triples; the
+cluster must stay under 70% CPU utilization WITHOUT dropping features.
+
+CPU-utilization model: util = QPS * cost_per_query / cluster_capacity,
+calibrated so the pre-CLOES (2-stage) system sits at the paper's reported
+32% on a normal day. Reproduced claims:
+  1. applying CLOES (beta tuned to 10) cuts utilization ~45% (32% -> ~18%);
+  2. under 3x QPS, CLOES keeps util below the 70% red line while the
+     2-stage system (or CLOES beta=1) would exceed it.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_split, emit, trained_cloes
+from repro.core import losses as L
+from repro.core import trainer as T
+
+
+def _cost_per_query(params, cfg, te):
+    x = jnp.asarray(te.x, jnp.float32)
+    q = jnp.asarray(te.q, jnp.float32)
+    mask = jnp.asarray(te.mask, jnp.float32)
+    m_q = te.m_q.astype(np.float64)
+    from repro.core import cascade as C
+    counts = np.asarray(C.expected_counts_per_query(
+        params, cfg, x, q, mask, jnp.asarray(m_q, jnp.float32)))
+    t = cfg.t
+    entering = np.concatenate([m_q[:, None], counts[:, :-1]], axis=1)
+    return (entering * t).sum(-1).mean()
+
+
+def _two_stage_cost(te, keep=6000):
+    from repro.data import features as F
+    m_q = te.m_q.astype(np.float64)
+    sv = F.FEATURE_COSTS[F.FEATURE_NAMES.index("sales_volume")]
+    return (sv * m_q + (F.FEATURE_COSTS.sum() - sv)
+            * np.minimum(keep, m_q)).mean()
+
+
+def run():
+    _, te = bench_split()
+    t0 = time.perf_counter()
+    cost_2stage = _two_stage_cost(te)
+    capacity = cost_2stage / 0.32            # calibrate: 2-stage = 32% util
+
+    rows = []
+    for name, beta in [("cloes_beta1", 1.0), ("cloes_beta5", 5.0),
+                       ("cloes_beta10", 10.0)]:
+        params, cfg, _ = trained_cloes(beta=beta)
+        c = _cost_per_query(params, cfg, te)
+        rows.append((name, c))
+    elapsed = (time.perf_counter() - t0) * 1e6
+
+    util_2stage = cost_2stage / capacity
+    emit("fig5/two_stage_normal_day", elapsed / 8,
+         f"util={100*util_2stage:.1f}%;paper=32%")
+    for name, c in rows:
+        u1, u3 = c / capacity, 3 * c / capacity
+        emit(f"fig5/{name}", elapsed / 8,
+             f"util_normal={100*u1:.1f}%;util_3xQPS={100*u3:.1f}%;"
+             f"red_line=70%")
+    by = dict(rows)
+    u10 = by["cloes_beta10"] / capacity
+    saved = 1 - by["cloes_beta10"] / cost_2stage
+    emit("fig5/beta10_saving", elapsed / 8,
+         f"saved={100*saved:.0f}%;paper=45%;util_normal={100*u10:.1f}%;paper_util=18%")
+    assert 3 * u10 < 0.70, "CLOES(beta=10) must survive 3x QPS under 70% util"
+    assert 3 * util_2stage > 0.70, \
+        "the 2-stage system needs degradation at 3x QPS (the paper's motivation)"
+    assert saved > 0.30, "expect large CPU saving at beta=10 (paper: 45%; ours larger — cheap tier more informative on synthetic log)"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

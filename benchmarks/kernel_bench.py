@@ -1,0 +1,81 @@
+"""Kernel benchmarks: fused Pallas cascade scorer vs the unfused XLA path.
+
+On this CPU host the Pallas kernel runs in interpret mode (Python-speed), so
+wall-clock kernel-vs-XLA numbers are NOT meaningful; what we measure here is
+(a) the unfused XLA path wall time as the production baseline curve over N,
+and (b) the MODELED TPU HBM traffic of fused vs unfused (the quantity the
+fusion actually optimizes — one feature-matrix read instead of T)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import cascade as C
+from repro.data import features as F
+from repro.kernels import ops
+
+
+def run():
+    masks = F.default_stage_masks(3)
+    cfg = C.CascadeConfig(3, F.N_FEATURES, F.N_QUERY_BUCKETS, masks,
+                          F.stage_costs(masks))
+    params = C.init_params(cfg, jax.random.PRNGKey(0), scale=0.3)
+    w_eff = params["w_x"] * jnp.asarray(cfg.masks, jnp.float32)
+
+    unfused = jax.jit(lambda x, q: C.log_pass_probs(params, cfg, x, q))
+    for n in (4096, 65536, 262144):
+        x = jax.random.normal(jax.random.PRNGKey(1), (n, F.N_FEATURES))
+        q = jnp.zeros((F.N_QUERY_BUCKETS,))
+        us = time_call(lambda: unfused(x, q))
+        # modeled HBM bytes on TPU: unfused reads x once per stage (T), the
+        # fused kernel reads it once; both write (N, T) outputs.
+        t = cfg.n_stages
+        d_pad, t_pad = 128, 8
+        bytes_unfused = n * F.N_FEATURES * 4 * t + n * t * 4 * (2 * t - 1)
+        bytes_fused = n * d_pad * 4 + n * t_pad * 4       # item-major: lane pad
+        d_sub = -(-F.N_FEATURES // 8) * 8                  # feature-major: sublanes
+        bytes_fused_fm = n * d_sub * 4 + n * t_pad * 4
+        emit(f"kernel/cascade_score_n{n}", us,
+             f"xla_unfused_us={us:.0f};"
+             f"modeled_hbm_unfused={bytes_unfused};modeled_hbm_fused={bytes_fused};"
+             f"traffic_ratio_itemmajor={bytes_unfused/bytes_fused:.2f};"
+             f"modeled_hbm_fused_fm={bytes_fused_fm};"
+             f"traffic_ratio_featmajor={bytes_unfused/bytes_fused_fm:.2f}")
+
+    # correctness spot check rides along (interpret mode)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2048, F.N_FEATURES))
+    zq = jnp.zeros((3,))
+    got = ops.cascade_score(x, w_eff, zq, interpret=True)
+    want = ops.cascade_score_ref(x, w_eff, zq)
+    err = float(jnp.abs(got - want).max())
+    emit("kernel/cascade_score_allclose", 0.0, f"max_err={err:.2e}")
+    assert err < 1e-5
+    got_fm = ops.cascade_score_fm(x.T, w_eff, zq, interpret=True)
+    err_fm = float(jnp.abs(got_fm - want).max())
+    emit("kernel/cascade_score_fm_allclose", 0.0, f"max_err={err_fm:.2e}")
+    assert err_fm < 1e-4
+
+    # swa_decode: reference XLA decode attention wall time + modeled traffic
+    b, h, hkv, hd = 4, 16, 8, 128
+    for s in (8192, 32768):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(k1, (b, 1, h, hd), jnp.float32)
+        k = jax.random.normal(k2, (b, s, hkv, hd), jnp.float32)
+        v = jax.random.normal(k3, (b, s, hkv, hd), jnp.float32)
+        from repro.models.layers import decode_attention
+        ref = jax.jit(lambda q, k, v: decode_attention(
+            q, k, v, q_offset=s - 1, valid_len=s))
+        us = time_call(lambda: ref(q, k, v))
+        cache_bytes = 2 * b * s * hkv * hd * 4
+        emit(f"kernel/swa_decode_s{s}", us,
+             f"xla_ref_us={us:.0f};cache_bytes={cache_bytes};"
+             f"window1024_bytes={2*b*1024*hkv*hd*4};"
+             f"window_traffic_saving={s/1024:.0f}x")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Aggregates experiments/dryrun/*.json into the per-(arch x shape x mesh)
+three-term table; prints CSV rows and the dominant bottleneck."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def rows(pod: str = "pod1"):
+    out = []
+    for f in sorted(DRYRUN.glob(f"*__{pod}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        out.append(rec)
+    return out
+
+
+def run():
+    for pod in ("pod1", "pod2"):
+        for rec in rows(pod):
+            r = rec["roofline"]
+            emit(f"roofline/{rec['arch']}/{rec['shape']}/{pod}",
+                 rec.get("compile_s", 0) * 1e6,
+                 f"t_compute={r['t_compute_s']:.3e}s;"
+                 f"t_memory={r['t_memory_s']:.3e}s;"
+                 f"t_collective={r['t_collective_s']:.3e}s;"
+                 f"dominant={r['dominant']};"
+                 f"useful_frac={r.get('useful_fraction', 0):.2f}")
+    recs = rows("pod1")
+    assert len(recs) >= 33, f"expected >=33 ok single-pod dry-runs, got {len(recs)}"
+    return recs
+
+
+if __name__ == "__main__":
+    run()

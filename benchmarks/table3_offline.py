@@ -1,0 +1,81 @@
+"""Paper Table 3: offline AUC / CPU-cost comparison.
+
+Algorithms: single-stage (all features), single-stage (simple features),
+2-stage heuristic, soft cascade (L1 product model), CLOES(beta=1),
+CLOES(beta=10). Cost column is the ratio to the single-stage-all baseline,
+exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_split, emit
+from repro.core import baselines as B
+from repro.core import losses as L
+from repro.core import trainer as T
+
+
+def run() -> list[dict]:
+    tr, te = bench_split()
+    rows = []
+    t0 = time.perf_counter()
+
+    cfg = B.single_stage_all_features()
+    p = T.fit(tr, cfg, L.LossConfig(), T.TrainConfig(loss="l1", epochs=6, lr=0.01))
+    r_tr = T.evaluate(p, cfg, tr)
+    r = T.evaluate(p, cfg, te)
+    base = r["expected_cost_per_item"]
+    rows.append({"algo": "single_stage_all", "train_auc": r_tr["auc"],
+                 "test_auc": r["auc"], "cost": 1.0, "paper": (0.88, 0.87, 1.0)})
+
+    cfgc = B.single_stage_simple_features()
+    p = T.fit(tr, cfgc, L.LossConfig(), T.TrainConfig(loss="l1", epochs=6, lr=0.01))
+    r_tr, r = T.evaluate(p, cfgc, tr), T.evaluate(p, cfgc, te)
+    rows.append({"algo": "single_stage_simple", "train_auc": r_tr["auc"],
+                 "test_auc": r["auc"], "cost": r["expected_cost_per_item"] / base,
+                 "paper": (0.73, 0.72, 0.06)})
+
+    ts = B.fit_two_stage(tr, tcfg=T.TrainConfig(loss="l1", epochs=6, lr=0.01))
+    rt_tr, rt = B.eval_two_stage(ts, tr), B.eval_two_stage(ts, te)
+    rows.append({"algo": "two_stage_6000", "train_auc": rt_tr["auc"],
+                 "test_auc": rt["auc"], "cost": rt["expected_cost_per_item"] / base,
+                 "paper": (0.78, 0.76, 0.30)})
+
+    p, cfg3 = B.fit_soft_cascade(tr, tcfg=T.TrainConfig(loss="l1", epochs=6, lr=0.01))
+    r_tr, r = T.evaluate(p, cfg3, tr), T.evaluate(p, cfg3, te)
+    rows.append({"algo": "soft_cascade_L1", "train_auc": r_tr["auc"],
+                 "test_auc": r["auc"], "cost": r["expected_cost_per_item"] / base,
+                 "paper": None})
+
+    for beta, paper in [(1.0, (0.81, 0.80, 0.29)), (10.0, (0.80, 0.77, 0.18))]:
+        p, cfgb = B.fit_cloes(tr, lcfg=L.LossConfig(beta=beta),
+                              tcfg=T.TrainConfig(loss="l3", epochs=6, lr=0.01))
+        r_tr, r = T.evaluate(p, cfgb, tr), T.evaluate(p, cfgb, te)
+        rows.append({"algo": f"CLOES_beta{int(beta)}", "train_auc": r_tr["auc"],
+                     "test_auc": r["auc"],
+                     "cost": r["expected_cost_per_item"] / base, "paper": paper})
+
+    elapsed = time.perf_counter() - t0
+    for row in rows:
+        paper = row["paper"]
+        ptxt = (f"paper_train={paper[0]}_test={paper[1]}_cost={paper[2]}"
+                if paper else "paper_na")
+        emit(f"table3/{row['algo']}", elapsed / len(rows) * 1e6,
+             f"train_auc={row['train_auc']:.3f};test_auc={row['test_auc']:.3f};"
+             f"cost_ratio={row['cost']:.3f};{ptxt}")
+    # qualitative claims of Table 3
+    by = {r["algo"]: r for r in rows}
+    assert by["single_stage_all"]["test_auc"] == max(r["test_auc"] for r in rows)
+    assert by["single_stage_simple"]["cost"] == min(r["cost"] for r in rows)
+    cloes1, two = by["CLOES_beta1"], by["two_stage_6000"]
+    assert cloes1["test_auc"] > two["test_auc"] and cloes1["cost"] <= two["cost"] * 1.05, \
+        "CLOES(beta=1) must dominate the 2-stage heuristic (Table 3)"
+    assert by["CLOES_beta10"]["cost"] < by["CLOES_beta1"]["cost"]
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Example: lower + compile one (arch x shape) on the 2-pod production mesh
+and print its memory/cost/roofline summary.
+
+    PYTHONPATH=src python examples/multi_pod_dryrun.py --arch gemma3-27b \
+        --shape long_500k
+"""
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b")
+    ap.add_argument("--shape", default="long_500k")
+    ap.add_argument("--single-pod", action="store_true")
+    args = ap.parse_args()
+    # dryrun sets XLA_FLAGS before importing jax — import it, don't inline
+    from repro.launch import dryrun
+    rec = dryrun.run_one(args.arch, args.shape,
+                         multi_pod=not args.single_pod)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("memory",)}, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

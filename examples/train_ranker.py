@@ -1,0 +1,77 @@
+"""Train a neural ranker (one of the assigned architectures, reduced size)
+on the cascade's survivor-scoring task for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_ranker.py --arch qwen3-8b --steps 200
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as CFG
+from repro.data import LogConfig, generate_log
+from repro.models import base as MB
+from repro.models import zoo as Z
+from repro.optim import adam
+from repro.serving.cascade_server import NeuralScorer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(CFG.get_smoke(args.arch), dtype=jnp.float32)
+    key = jax.random.PRNGKey(0)
+    scorer = NeuralScorer.create(cfg, key)
+    log = generate_log(LogConfig(n_queries=400, seed=2))
+
+    # pairwise ranking loss on (clicked, unclicked) item pairs
+    params = {"body": scorer.params, "head": scorer.head}
+    opt = adam(args.lr)
+    opt_state = opt.init(params)
+
+    def loss_fn(p, pos_feats, neg_feats):
+        sc = dataclasses.replace(scorer, params=p["body"], head=p["head"])
+        s_pos = sc.score(pos_feats)
+        s_neg = sc.score(neg_feats)
+        return jnp.mean(jax.nn.softplus(-(s_pos - s_neg)))
+
+    @jax.jit
+    def step(p, o, pos, neg):
+        l, g = jax.value_and_grad(loss_fn)(p, pos, neg)
+        upd, o = opt.update(g, o, p)
+        p = jax.tree_util.tree_map(lambda a, u: a + u, p, upd)
+        return p, o, l
+
+    rng = np.random.default_rng(0)
+    mask = log.mask.astype(bool)
+    pos_pool = log.x[(log.y > 0) & mask]
+    neg_pool = log.x[(log.y == 0) & mask]
+    t0 = time.time()
+    for i in range(args.steps):
+        pos = jnp.asarray(pos_pool[rng.integers(0, len(pos_pool), args.batch)],
+                          jnp.float32)
+        neg = jnp.asarray(neg_pool[rng.integers(0, len(neg_pool), args.batch)],
+                          jnp.float32)
+        params, opt_state, l = step(params, opt_state, pos, neg)
+        if i % max(1, args.steps // 10) == 0:
+            print(f"step {i:4d} pairwise loss {float(l):.4f} "
+                  f"({(time.time()-t0)/(i+1):.3f}s/step)")
+    # eval: pairwise accuracy on held-out pairs
+    sc = dataclasses.replace(scorer, params=params["body"], head=params["head"])
+    pos = jnp.asarray(pos_pool[-256:], jnp.float32)
+    neg = jnp.asarray(neg_pool[-256:], jnp.float32)
+    acc = float((sc.score(pos) > sc.score(neg)).mean())
+    print(f"held-out pairwise accuracy: {acc:.3f} (random = 0.5)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Dump the biggest collective ops (with shapes and enclosing computation)
+for one dry-run combo — the §Perf diagnosis tool.
+
+    PYTHONPATH=src python experiments/inspect_hlo.py yi-34b train_4k
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import re
+import sys
+from collections import defaultdict
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    variant = sys.argv[3] if len(sys.argv) > 3 else "baseline"
+    from repro.launch.dryrun import lower_one
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import HloCost, _shape_bytes, _TRIP_RE
+
+    mesh = make_production_mesh(multi_pod=False)
+    lowered, meta = lower_one(arch, shape, mesh, variant=variant)
+    hlo = lowered.compile().as_text()
+
+    # trip counts per body
+    trips = {}
+    for line in hlo.splitlines():
+        if "while(" in line:
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mt = _TRIP_RE.search(line)
+            if mb and mt:
+                trips[mb.group(1)] = int(mt.group(1))
+
+    comp = None
+    rows = []
+    for line in hlo.splitlines():
+        m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$", line)
+        if m and "=" not in line.split("(")[0]:
+            comp = m.group(2)
+            continue
+        mm = re.match(r"^\s*%?([\w\.\-]+)\s*=\s*(\S+)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(?:-start)?\(", line)
+        if mm:
+            nbytes = _shape_bytes(mm.group(2))
+            mult = trips.get(comp, 1)
+            meta_m = re.search(r'op_name="([^"]*)"', line)
+            rows.append((nbytes * mult, nbytes, mult, mm.group(3), comp,
+                         (meta_m.group(1) if meta_m else "")[:110]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total collective bytes/dev: {total:.3e}")
+    for r in rows[:20]:
+        print(f"  {r[0]:.3e} (= {r[1]:.2e} x{r[2]}) {r[3]:18s} in {r[4][:40]:40s} {r[5]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Minimal pytree checkpointing (msgpack + npz; no orbax in this env)."""
+
+from repro.checkpoint.io import save_pytree, load_pytree
+
+__all__ = ["save_pytree", "load_pytree"]

@@ -1,0 +1,60 @@
+"""Pytree checkpointing: arrays to .npz + structure to msgpack sidecar.
+
+Works for any nested dict/list/tuple of jax/numpy arrays and scalars. Arrays
+are gathered to host (fine at the sizes we train here; a sharded
+orbax-style writer is the production path on real pods)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="", out=None):
+    out = out if out is not None else {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            _flatten(tree[k], f"{prefix}{k}/", out)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            _flatten(v, f"{prefix}{i}/", out)
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def save_pytree(path: str | Path, tree) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    arrays = {k: np.asarray(v) for k, v in flat.items()
+              if hasattr(v, "shape") or isinstance(v, (int, float))}
+    meta = {k: v for k, v in flat.items()
+            if not (hasattr(v, "shape") or isinstance(v, (int, float)))}
+    np.savez(path.with_suffix(".npz"), **{k: np.asarray(v)
+                                          for k, v in arrays.items()})
+    path.with_suffix(".meta.json").write_text(json.dumps(meta, default=str))
+
+
+def load_pytree(path: str | Path) -> dict:
+    path = Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    out: dict = {}
+    for key in data.files:
+        parts = key.split("/")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = data[key]
+    meta_path = path.with_suffix(".meta.json")
+    if meta_path.exists():
+        for k, v in json.loads(meta_path.read_text()).items():
+            parts = k.split("/")
+            node = out
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = v
+    return out

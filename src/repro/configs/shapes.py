@@ -1,0 +1,114 @@
+"""The four assigned input shapes and per-(arch, shape) input specs.
+
+  train_4k     seq_len=4096    global_batch=256   train_step
+  prefill_32k  seq_len=32768   global_batch=32    serve prefill
+  decode_32k   seq_len=32768   global_batch=128   serve decode (1 new token)
+  long_500k    seq_len=524288  global_batch=1     long-context decode
+
+Decode shapes lower `decode_step` — ONE token against a cache of seq_len.
+long_500k requires sub-quadratic attention: it runs for the SSM/hybrid archs
+(rwkv6, zamba2) and for gemma3 (sliding-window local layers + O(S)-per-token
+global layers with ring-buffer local caches); it is SKIPPED for pure
+full-attention architectures (yi, qwen3, starcoder2, dbrx, arctic, pixtral,
+seamless) — see DESIGN.md §Arch-applicability.
+
+Modality carve-outs (per the brief): seamless's audio frontend and pixtral's
+ViT are stubs — input_specs provides precomputed frame/patch embeddings.
+For seamless the `seq_len` of a shape applies to the audio (encoder) stream
+at train/prefill and to the decoder self-attention cache at decode (with a
+4096-frame encoder context); the text decoder length is seq_len/8 capped at
+1024 at train/prefill.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+SUBQUADRATIC_ARCHS = {"zamba2-1.2b", "rwkv6-1.6b", "gemma3-27b"}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.name not in SUBQUADRATIC_ARCHS:
+        return False, ("pure full-attention architecture: 524288-token decode "
+                       "requires a sub-quadratic/sliding-window variant "
+                       "(skip noted in DESIGN.md)")
+    return True, ""
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _emb(shape, cfg):
+    return jax.ShapeDtypeStruct(shape, cfg.dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for the step's data inputs (no cache)."""
+    sh = SHAPES[shape_name]
+    b, s = sh.global_batch, sh.seq_len
+    d = cfg.d_model
+
+    if sh.step == "decode":
+        return {"tokens": _i32((b, 1))}
+
+    if cfg.arch_type == "encdec":
+        s_dec = min(max(s // 8, 16), 1024)
+        out = {"frontend": _emb((b, s, d), cfg), "tokens": _i32((b, s_dec))}
+        if sh.step == "train":
+            out["targets"] = _i32((b, s_dec))
+        return out
+
+    if cfg.frontend_positions:          # vlm: patches + text = seq_len total
+        p = cfg.frontend_positions
+        out = {"frontend": _emb((b, p, d), cfg), "tokens": _i32((b, s - p))}
+        if sh.step == "train":
+            out["targets"] = _i32((b, s - p))
+        return out
+
+    out = {"tokens": _i32((b, s))}
+    if sh.step == "train":
+        out["targets"] = _i32((b, s))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Serving-cache ShapeDtypeStructs for prefill/decode shapes."""
+    from repro.serving.engine import cache_shapes
+    sh = SHAPES[shape_name]
+    enc_len = 4096 if cfg.arch_type == "encdec" else 0
+    if cfg.arch_type == "encdec" and sh.step == "prefill":
+        enc_len = sh.seq_len
+    return cache_shapes(cfg, sh.global_batch, sh.seq_len, enc_len)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Everything the step function takes besides params/opt-state."""
+    sh = SHAPES[shape_name]
+    specs = {"batch": batch_specs(cfg, shape_name)}
+    if sh.step in ("prefill", "decode"):
+        specs["cache"] = cache_specs(cfg, shape_name)
+    if sh.step == "decode":
+        specs["cache_len"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return specs

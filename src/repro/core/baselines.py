@@ -1,0 +1,134 @@
+"""Comparison algorithms from the paper (§4.2):
+
+- single-stage classifier with ALL features (accuracy ceiling, cost 1.0);
+- single-stage classifier with the cheapest features only;
+- the 2-stage heuristic deployed at Taobao before CLOES: stage 1 filters by
+  regularized sales volume to a constant 6000 survivors, stage 2 is an LR
+  over all remaining features;
+- soft cascade [Raykar et al. / Lefakis & Fleuret]: the same product-of-
+  sigmoids model trained with the pure likelihood objective L1 (no cost or
+  user-experience terms).
+
+Every baseline reports (train AUC, test AUC, cost ratio) as in Table 3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cascade as C
+from repro.core import losses as L
+from repro.core import metrics as M
+from repro.core.trainer import TrainConfig, fit, evaluate
+from repro.data import features as F
+from repro.data.synthetic import SearchLog
+
+
+def _single_stage_cfg(feature_mask: np.ndarray) -> C.CascadeConfig:
+    """A 1-stage 'cascade' == plain logistic regression over masked features."""
+    mask = feature_mask[None, :]  # (1, d_x)
+    t = np.array([F.FEATURE_COSTS[feature_mask > 0].sum()])
+    return C.CascadeConfig(n_stages=1, d_x=F.N_FEATURES,
+                           d_q=F.N_QUERY_BUCKETS, masks=mask, stage_times=t)
+
+
+def single_stage_all_features() -> C.CascadeConfig:
+    return _single_stage_cfg(np.ones(F.N_FEATURES))
+
+
+def single_stage_simple_features(cost_cap: float = 0.05) -> C.CascadeConfig:
+    """Cheapest features only ('e.g., sales volume')."""
+    return _single_stage_cfg((F.FEATURE_COSTS <= cost_cap).astype(np.float64))
+
+
+@dataclasses.dataclass
+class TwoStageResult:
+    params: C.Params
+    cfg: C.CascadeConfig
+    stage1_keep: int
+
+
+def fit_two_stage(log: SearchLog, stage1_keep: int = 6000,
+                  tcfg: TrainConfig | None = None) -> TwoStageResult:
+    """The heuristic production baseline. Stage 1: rank by regularized sales
+    volume, keep a constant `stage1_keep` (6000 at Taobao). Stage 2: LR with
+    all features, trained on instances that *would survive* stage 1."""
+    tcfg = tcfg or TrainConfig(loss="l1", epochs=8)
+    sv_idx = F.FEATURE_NAMES.index("sales_volume")
+    cfg = single_stage_all_features()
+    # stage-1 survival within each group, scaled to the group size
+    keep_frac = np.minimum(stage1_keep / np.maximum(log.m_q, 1), 1.0)  # (B,)
+    G = log.x.shape[1]
+    k_in_group = np.maximum(1, np.round(keep_frac * G)).astype(int)
+    sv = log.x[:, :, sv_idx]
+    order = np.argsort(-sv, axis=1)
+    rank = np.argsort(order, axis=1)
+    survive = (rank < k_in_group[:, None]).astype(np.float64) * log.mask
+    pruned = dataclasses.replace(log, mask=survive)
+    params = fit(pruned, cfg, L.LossConfig(), tcfg)
+    return TwoStageResult(params=params, cfg=cfg, stage1_keep=stage1_keep)
+
+
+def eval_two_stage(res: TwoStageResult, log: SearchLog) -> dict[str, float]:
+    """Score = stage-2 LR on survivors, -inf otherwise; cost = stage-1 sales
+    volume for all + full feature set for survivors."""
+    sv_idx = F.FEATURE_NAMES.index("sales_volume")
+    keep_frac = np.minimum(res.stage1_keep / np.maximum(log.m_q, 1), 1.0)
+    G = log.x.shape[1]
+    k_in_group = np.maximum(1, np.round(keep_frac * G)).astype(int)
+    sv = log.x[:, :, sv_idx]
+    order = np.argsort(-sv, axis=1)
+    rank = np.argsort(order, axis=1)
+    survive = (rank < k_in_group[:, None]) & (log.mask > 0)
+
+    x = jnp.asarray(log.x, jnp.float32)
+    q = jnp.asarray(log.q, jnp.float32)
+    scores = np.asarray(C.final_score(res.params, res.cfg, x, q))
+    # two-stage ranking: survivors ranked by LR score, non-survivors below
+    ranked_scores = np.where(survive, scores, scores.min() - 10.0)
+    # cost in index-item units: stage 1 scans all M_q recalled items,
+    # stage 2 runs the full feature set on min(6000, M_q) survivors
+    n = log.m_q.sum()
+    cost_s1 = F.FEATURE_COSTS[sv_idx] * n
+    cost_s2 = ((F.FEATURE_COSTS.sum() - F.FEATURE_COSTS[sv_idx])
+               * np.minimum(res.stage1_keep, log.m_q).sum())
+    per_query_lat = (F.FEATURE_COSTS[sv_idx] * log.mask.sum(1) / log.mask.sum(1).clip(1)
+                     * log.m_q
+                     + (F.FEATURE_COSTS.sum() - F.FEATURE_COSTS[sv_idx])
+                     * np.minimum(res.stage1_keep, log.m_q))
+    return {
+        "auc": M.group_auc(ranked_scores, log.y, log.mask),
+        "expected_cost_per_item": float((cost_s1 + cost_s2) / n),
+        "mean_expected_latency": float(per_query_lat.mean()),
+        "mean_final_count": float(np.minimum(res.stage1_keep, log.m_q).mean()),
+    }
+
+
+def fit_soft_cascade(log: SearchLog, n_stages: int = 3,
+                     tcfg: TrainConfig | None = None):
+    """Soft cascade: the noisy-AND product model (Eqs 1–5) *without* the cost
+    and user-experience terms — i.e. CLOES trained with L1 only."""
+    masks = F.default_stage_masks(n_stages)
+    cfg = C.CascadeConfig(n_stages=n_stages, d_x=F.N_FEATURES,
+                          d_q=F.N_QUERY_BUCKETS, masks=masks,
+                          stage_times=F.stage_costs(masks))
+    tcfg = tcfg or TrainConfig(loss="l1", epochs=8)
+    params = fit(log, cfg, L.LossConfig(), tcfg)
+    return params, cfg
+
+
+def fit_cloes(log: SearchLog, n_stages: int = 3, lcfg: L.LossConfig | None = None,
+              tcfg: TrainConfig | None = None):
+    """The proposed model: full L3 objective."""
+    masks = F.default_stage_masks(n_stages)
+    cfg = C.CascadeConfig(n_stages=n_stages, d_x=F.N_FEATURES,
+                          d_q=F.N_QUERY_BUCKETS, masks=masks,
+                          stage_times=F.stage_costs(masks))
+    lcfg = lcfg or L.LossConfig()
+    tcfg = tcfg or TrainConfig(loss="l3", epochs=8)
+    params = fit(log, cfg, lcfg, tcfg)
+    return params, cfg

@@ -1,0 +1,102 @@
+"""SGD trainer for the CLOES cascade (paper §3.2: minibatch SGD, params
+initialized near zero). Batches are query groups so the per-query reductions
+of Eqs 10/16 are local sums. A data-parallel pjit path is in launch/train.py;
+this module is the single-host loop used by the offline experiments."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cascade as C
+from repro.core import losses as L
+from repro.data.synthetic import SearchLog
+from repro.optim.sgd import apply_updates, momentum_sgd
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    loss: str = "l3"           # l1 | l2 | l3
+    lr: float = 0.05
+    momentum: float = 0.9
+    batch_groups: int = 64     # query groups per minibatch
+    epochs: int = 10
+    seed: int = 0
+    log_every: int = 200
+
+
+def batches(log: SearchLog, batch_groups: int, seed: int) -> Iterator[dict]:
+    rng = np.random.default_rng(seed)
+    B = log.x.shape[0]
+    perm = rng.permutation(B)
+    for s in range(0, B - batch_groups + 1, batch_groups):
+        idx = perm[s:s + batch_groups]
+        yield {
+            "x": jnp.asarray(log.x[idx], jnp.float32),
+            "q": jnp.asarray(log.q[idx], jnp.float32),
+            "y": jnp.asarray(log.y[idx], jnp.float32),
+            "mask": jnp.asarray(log.mask[idx], jnp.float32),
+            "behavior": jnp.asarray(log.behavior[idx]),
+            "price": jnp.asarray(log.price[idx], jnp.float32),
+            "m_q": jnp.asarray(log.m_q[idx], jnp.float32),
+        }
+
+
+@partial(jax.jit, static_argnames=("cfg", "lcfg", "loss_name", "opt_update"))
+def train_step(params, opt_state, batch, cfg: C.CascadeConfig,
+               lcfg: L.LossConfig, loss_name: str, opt_update):
+    loss_fn = L.LOSSES[loss_name]
+    loss, grads = jax.value_and_grad(loss_fn)(params, cfg, lcfg, batch)
+    updates, opt_state = opt_update(grads, opt_state, params)
+    return apply_updates(params, updates), opt_state, loss
+
+
+def fit(log: SearchLog, cfg: C.CascadeConfig, lcfg: L.LossConfig,
+        tcfg: TrainConfig | None = None,
+        callback: Callable[[int, float], None] | None = None) -> C.Params:
+    tcfg = tcfg or TrainConfig()
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = C.init_params(cfg, key)
+    opt = momentum_sgd(tcfg.lr, tcfg.momentum)
+    opt_state = opt.init(params)
+    step = 0
+    for epoch in range(tcfg.epochs):
+        for batch in batches(log, tcfg.batch_groups, tcfg.seed + epoch):
+            params, opt_state, loss = train_step(
+                params, opt_state, batch, cfg, lcfg, tcfg.loss, opt.update)
+            if callback and step % tcfg.log_every == 0:
+                callback(step, float(loss))
+            step += 1
+    return params
+
+
+def evaluate(params: C.Params, cfg: C.CascadeConfig, log: SearchLog,
+             lcfg: L.LossConfig | None = None) -> dict[str, float]:
+    """Offline metrics: AUC of the final score + expected cost per instance
+    (Eq 8) + expected per-query latency (Eq 16) + final result size."""
+    from repro.core import metrics as M
+    lcfg = lcfg or L.LossConfig()
+    x = jnp.asarray(log.x, jnp.float32)
+    q = jnp.asarray(log.q, jnp.float32)
+    mask = jnp.asarray(log.mask, jnp.float32)
+    m_q = jnp.asarray(log.m_q, jnp.float32)
+    scores = np.asarray(C.final_score(params, cfg, x, q))
+    cost = float(L.expected_cost(params, cfg, x, q, mask, m_q=m_q))
+    lat = np.asarray(L.expected_latency_per_query(params, cfg, lcfg, x, q, mask, m_q))
+    counts_T = np.asarray(
+        C.expected_counts_per_query(params, cfg, x, q, mask, m_q))[:, -1]
+    return {
+        "auc": M.group_auc(scores, log.y, log.mask),
+        "pooled_auc": M.auc(scores, log.y, log.mask),
+        "expected_cost_per_item": cost,
+        "mean_expected_latency": float(lat.mean()),
+        "p95_expected_latency": float(np.percentile(lat, 95)),
+        "mean_final_count": float(counts_T.mean()),
+        "frac_queries_below_no": float(
+            (counts_T < np.minimum(lcfg.n_o, log.m_q)).mean()),
+    }

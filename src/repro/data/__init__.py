@@ -1,0 +1,4 @@
+from repro.data.synthetic import LogConfig, SearchLog, generate_log
+from repro.data import features
+
+__all__ = ["LogConfig", "SearchLog", "generate_log", "features"]

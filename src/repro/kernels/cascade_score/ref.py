@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused cascade scorer.
+
+Computes, for every item, the per-stage cumulative log pass-probability of
+the CLOES cascade (Eqs 1-2, 6):
+
+    logit[i, j] = x[i] . w_eff[j] + zq[j]
+    out[i, j]   = sum_{k<=j} log sigmoid(logit[i, k])
+
+w_eff is the stage weight vector already masked by the stage feature mask;
+zq[j] = w_q[j] . g(q) + b[j] is the per-stage query-side bias (scalar per
+stage for a given query).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cascade_score_ref(x: jax.Array, w_eff: jax.Array,
+                      zq: jax.Array) -> jax.Array:
+    """x: (N, d), w_eff: (T, d), zq: (T,). Returns (N, T) f32."""
+    logits = (x.astype(jnp.float32) @ w_eff.astype(jnp.float32).T
+              + zq.astype(jnp.float32))
+    return jnp.cumsum(jax.nn.log_sigmoid(logits), axis=-1)

@@ -1,0 +1,51 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute through the Pallas interpreter
+(interpret=True) — the kernel *body* runs and is numerically validated; on a
+real TPU runtime the same call sites compile to Mosaic. `interpret` defaults
+to auto-detection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cascade_score.kernel import (cascade_score as _cascade_score,
+                                                cascade_score_fm as _cascade_score_fm)
+from repro.kernels.cascade_score.ref import cascade_score_ref
+from repro.kernels.swa_decode.kernel import swa_decode as _swa_decode, NO_WINDOW
+from repro.kernels.swa_decode.ref import swa_decode_ref
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cascade_score(x, w_eff, zq, *, interpret: bool | None = None):
+    """Fused T-stage cascade scoring: (N, d) items -> (N, T) cumulative
+    log pass-probabilities. See kernels/cascade_score/kernel.py."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _cascade_score(x, w_eff, zq, interpret=interpret)
+
+
+def cascade_score_fm(xt, w_eff, zq, *, interpret: bool | None = None):
+    """Feature-major fused scorer: xt (d, N) -> (N, T). The production
+    layout — see kernels/cascade_score/kernel.py."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _cascade_score_fm(xt, w_eff, zq, interpret=interpret)
+
+
+def swa_decode(q, k, v, cache_len, *, window: int = NO_WINDOW,
+               interpret: bool | None = None):
+    """Flash-decode attention of one token against a (sliding-window) KV
+    cache. q: (B, H, hd), k/v: (B, S, Hkv, hd) -> (B, H, hd)."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _swa_decode(q, k, v, cache_len, window=window, interpret=interpret)
+
+
+__all__ = ["cascade_score", "cascade_score_fm", "cascade_score_ref", "swa_decode",
+           "swa_decode_ref", "NO_WINDOW"]

@@ -1,0 +1,116 @@
+"""Sliding-window decode attention — Pallas TPU kernel (flash-decode).
+
+The serving hot path for the long-context shapes: ONE query token against a
+KV cache of up to 524288 positions. The cache never fits VMEM; the kernel
+streams KV chunks HBM->VMEM along the innermost grid dimension, keeping an
+online-softmax accumulator (m, l, acc) in VMEM scratch, and writes the
+normalized output on the last chunk.
+
+Grid: (B, Hkv, S/BLOCK_KV). Each program owns one (batch, kv-head) pair; its
+`rep` grouped query heads ride along in the q block so the MXU sees a
+(rep, hd) x (hd, BLOCK_KV) matmul per chunk.
+
+Window masking is positional: chunk positions outside
+(cache_len - window, cache_len] contribute -inf. Out-of-window chunks are
+still visited in this baseline (masked out); skipping them via a banded
+grid is the documented §Perf follow-up.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_KV = 512
+NO_WINDOW = 1 << 30
+_NEG = -1e30
+
+
+def _kernel(cache_len_ref, q_ref, k_ref, v_ref, out_ref,
+            m_ref, l_ref, acc_ref, *, window: int, hd: int, blk: int):
+    ci = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cache_len = cache_len_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)                 # (rep, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (blk, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)              # (blk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (rep, blk)
+    s = s / math.sqrt(hd)
+    pos = ci * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)
+    valid = (pos <= cache_len) & (pos > cache_len - window)
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_ref[...]                                  # (rep, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    scale = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                               # (rep, blk)
+    l_ref[...] = l_ref[...] * scale + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * scale + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (rep, hd)
+    m_ref[...] = m_new
+
+    @pl.when(ci == nk - 1)
+    def _fini():
+        out_ref[0, 0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "interpret", "block_kv"))
+def swa_decode(q: jax.Array, k: jax.Array, v: jax.Array, cache_len,
+               *, window: int = NO_WINDOW, interpret: bool = False,
+               block_kv: int = BLOCK_KV) -> jax.Array:
+    """q: (B, H, hd); k/v: (B, S, Hkv, hd); returns (B, H, hd)."""
+    b, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    pad = (-s) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = k.shape[1] // block_kv
+    qg = q.reshape(b, hkv, rep, hd)
+    cache_len = jnp.asarray(cache_len, jnp.int32).reshape(1)
+
+    kern = functools.partial(_kernel, window=window, hd=hd, blk=block_kv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                           # cache_len in SMEM
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd),
+                         lambda bi, hi, ci, _len: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd),
+                         lambda bi, hi, ci, _len: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd),
+                         lambda bi, hi, ci, _len: (bi, ci, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda bi, hi, ci, _len: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),           # running max m
+            pltpu.VMEM((rep, 1), jnp.float32),           # running sum l
+            pltpu.VMEM((rep, hd), jnp.float32),          # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, hd), q.dtype),
+        interpret=interpret,
+    )(cache_len, qg, k, v)
+    return out.reshape(b, h, hd)

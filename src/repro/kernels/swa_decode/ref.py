@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the sliding-window decode-attention kernel.
+
+One new query token per sequence attends to a KV cache of length S, masked
+to positions [cache_len - window, cache_len] (window=NO_WINDOW => full
+causal decode)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_decode_ref(q, k, v, cache_len, window: int) -> jax.Array:
+    """q: (B, H, hd); k/v: (B, S, Hkv, hd); cache_len: scalar int (the query
+    position; cache slots < cache_len+1 are written). Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    kk = jnp.repeat(k, rep, axis=2).astype(jnp.float32)    # (B, S, H, hd)
+    vv = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kk)
+    logits = logits / math.sqrt(hd)
+    pos = jnp.arange(s)
+    mask = (pos <= cache_len) & (pos > cache_len - window)
+    logits = jnp.where(mask[None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, vv).astype(q.dtype)

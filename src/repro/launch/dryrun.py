@@ -1,0 +1,256 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, with NO real allocation (ShapeDtypeStruct stand-ins).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+Outputs one JSON per combo under experiments/dryrun/ with:
+  memory_analysis (bytes/device), cost_analysis (flops/bytes),
+  per-collective byte totals parsed from the optimized HLO (§Roofline).
+"""
+
+# The VERY FIRST lines, before ANY other import (jax locks the device count
+# on first initialization):
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as CFG
+from repro.configs import shapes as SH
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.launch import sharding as SHD
+from repro.models import base as MB
+from repro.models import zoo as Z
+from repro.optim import adam
+from repro.serving import engine as E
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# Training of the biggest models cannot hold replicated optimizer state:
+# use weight-gathered FSDP rules (embed dim over the data axes) above this.
+FSDP_PARAM_THRESHOLD = 20_000_000_000
+
+
+def recommended_variant(cfg, shape_name: str) -> str:
+    """Per-arch optimized-variant policy, from the EXPERIMENTS.md §Perf
+    sweep: explicit shard_map (attention/MoE) wins 3.5-14x exactly where
+    GSPMD mis-shards — query/kv head counts or expert counts that do not
+    divide the 16-way model axis — and LOSES ~2x (shard_map boundary
+    resharding) where the mesh divides cleanly. Chunked SSD always wins on
+    serialization for SSM/hybrid at full-sequence shapes."""
+    n_model = 16
+    step = SH.SHAPES[shape_name].step
+    if cfg.arch_type in ("ssm", "hybrid") and step in ("train", "prefill"):
+        return "chunked"
+    mis_sharded = (cfg.n_heads % n_model or cfg.n_kv_heads % n_model
+                   or (cfg.n_experts and cfg.n_experts % n_model))
+    if step in ("train", "prefill") and mis_sharded:
+        return "shmap"
+    if step == "decode":
+        return "seqkv"      # seq-sharded cache + grouped-GQA (code default)
+    return "baseline"
+
+
+def _shard_mode(cfg, step: str, variant: str = "baseline") -> str:
+    if variant == "zero3":
+        return "zero3"
+    if step == "train" and cfg.param_count() > FSDP_PARAM_THRESHOLD:
+        return "fsdp"
+    return "tp"
+
+
+def lower_one(arch: str, shape_name: str, mesh, *, donate: bool = True,
+              variant: str = "baseline"):
+    """Build the jitted step for (arch, shape) and lower it on `mesh`.
+    Returns (lowered, meta)."""
+    cfg = CFG.get(arch)
+    if variant in ("seqkv", "shmap"):
+        cfg = dataclasses.replace(cfg, attn_shard=variant)
+    if variant == "chunked":
+        cfg = dataclasses.replace(cfg, ssm_impl="chunked")
+    if variant == "shmap":
+        from repro.models import layers as _lyr
+        _lyr.MESH = mesh
+    sh = SH.SHAPES[shape_name]
+    ok, why = SH.applicable(cfg, shape_name)
+    if not ok:
+        return None, {"arch": arch, "shape": shape_name,
+                      "step": SH.SHAPES[shape_name].step, "skipped": why}
+    tmpl = Z.templates(cfg)
+    mode = _shard_mode(cfg, sh.step, variant)
+    p_shard = SHD.param_shardings(tmpl, mesh, mode)
+    p_struct = MB.shape_structs(tmpl, cfg.dtype)
+    batch = SH.batch_specs(cfg, shape_name)
+    b_shard = SHD.batch_shardings(batch, mesh)
+
+    if sh.step == "train":
+        opt = adam(1e-4)
+        o_struct = {"step": jax.ShapeDtypeStruct((), jnp.int32),
+                    "m": p_struct, "v": p_struct}
+        o_shard = {"step": SHD.replicated(mesh), "m": p_shard, "v": p_shard}
+
+        def step_fn(params, opt_state, batch_):
+            return Z.train_step(params, opt_state, batch_, cfg, opt.update)
+
+        jitted = jax.jit(step_fn,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         donate_argnums=(0, 1) if donate else ())
+        with mesh:
+            lowered = jitted.lower(p_struct, o_struct, batch)
+
+    elif sh.step == "prefill":
+        cache = SH.cache_specs(cfg, shape_name)
+        c_shard = SHD.cache_shardings(cache, mesh)
+
+        def step_fn(params, batch_, cache_):
+            return E.prefill(params, cfg, batch_, cache_)
+
+        jitted = jax.jit(step_fn,
+                         in_shardings=(p_shard, b_shard, c_shard),
+                         donate_argnums=(2,) if donate else ())
+        with mesh:
+            lowered = jitted.lower(p_struct, batch, cache)
+
+    else:  # decode
+        cache = SH.cache_specs(cfg, shape_name)
+        c_shard = SHD.cache_shardings(
+            cache, mesh, policy="seq" if variant in ("seqkv", "shmap") else "heads")
+
+        def step_fn(params, tokens, cache_, cache_len):
+            return E.decode_step(params, cfg, tokens, cache_, cache_len)
+
+        jitted = jax.jit(step_fn,
+                         in_shardings=(p_shard, b_shard["tokens"], c_shard,
+                                       SHD.replicated(mesh)),
+                         donate_argnums=(2,) if donate else ())
+        with mesh:
+            lowered = jitted.lower(p_struct, batch["tokens"], cache,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+
+    tokens = (sh.global_batch if sh.step == "decode"
+              else sh.global_batch * sh.seq_len)
+    cache_bytes = 0
+    if sh.step in ("prefill", "decode"):
+        import numpy as np
+        cache_bytes = sum(
+            int(np.prod(s.shape)) * s.dtype.itemsize
+            for s in jax.tree_util.tree_leaves(SH.cache_specs(cfg, shape_name)))
+    meta = {"arch": arch, "shape": shape_name, "step": sh.step,
+            "shard_mode": mode, "tokens": tokens,
+            "cache_bytes": cache_bytes,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "n_layers": cfg.n_layers + cfg.n_enc_layers,
+            "d_model": cfg.d_model,
+            "n_experts": cfg.n_experts, "top_k": cfg.top_k}
+    return lowered, meta
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            out_dir: Path = DEFAULT_OUT, variant: str = "baseline") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    t0 = time.time()
+    lowered, meta = lower_one(arch, shape_name, mesh, variant=variant)
+    rec = dict(meta, multi_pod=multi_pod, n_chips=n_chips, variant=variant)
+    if lowered is None:
+        rec["status"] = "skipped"
+        _save(rec, arch, shape_name, multi_pod, out_dir)
+        return rec
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        k: int(getattr(mem, k, 0)) for k in
+        ["argument_size_in_bytes", "output_size_in_bytes",
+         "temp_size_in_bytes", "generated_code_size_in_bytes"]}
+    cost = compiled.cost_analysis()
+    rec["cost"] = {k: float(v) for k, v in cost.items()
+                   if k in ("flops", "bytes accessed", "transcendentals")}
+    hlo = compiled.as_text()
+    hc = roofline.HloCost(hlo)
+    rec["hlo_dot_flops_per_device"] = hc.flops()
+    rec["collectives"] = hc.collectives()
+    # memory term: body bytes from cost_analysis (per-device, body-once) vs
+    # the analytic streaming floor (weights/caches/activations per step)
+    rec["bytes_per_device"] = max(
+        rec["cost"].get("bytes accessed", 0.0),
+        roofline.streaming_floor_bytes(rec, n_chips))
+    rec["status"] = "ok"
+    rec["roofline"] = roofline.terms(rec, n_chips=n_chips)
+    _save(rec, arch, shape_name, multi_pod, out_dir)
+    return rec
+
+
+def _save(rec, arch, shape_name, multi_pod, out_dir: Path):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    pod = "pod2" if multi_pod else "pod1"
+    suffix = "" if rec.get("variant", "baseline") == "baseline" else \
+        f"__{rec['variant']}"
+    path = out_dir / f"{arch}__{shape_name}__{pod}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    help="baseline|seqkv|shmap|chunked|zero3|auto "
+                         "(auto = recommended_variant per arch/shape)")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+    out = Path(args.out)
+
+    combos = []
+    archs = CFG.all_archs() if (args.all or not args.arch) else [args.arch]
+    shape_names = (list(SH.SHAPES) if (args.all or not args.shape)
+                   else [args.shape])
+    pods = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shape_names:
+            for mp in pods:
+                combos.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in combos:
+        tag = f"{a} x {s} x {'2pod' if mp else '1pod'}"
+        try:
+            v = args.variant
+            if v == "auto":
+                v = recommended_variant(CFG.get(a), s)
+            rec = run_one(a, s, multi_pod=mp, out_dir=out, variant=v)
+            if rec["status"] == "skipped":
+                print(f"[skip] {tag}: {rec['skipped']}")
+            else:
+                print(f"[ ok ] {tag}: compile {rec['compile_s']}s "
+                      f"flops {rec['cost'].get('flops', 0):.3e} "
+                      f"coll {rec['collectives'].get('total_bytes', 0):.3e}B")
+        except Exception as ex:                        # noqa: BLE001
+            failures += 1
+            print(f"[FAIL] {tag}: {type(ex).__name__}: {str(ex)[:400]}")
+            traceback.print_exc(limit=3)
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Serving launcher: run the CLOES cascade server over a synthetic request
+stream (the paper's operational workload) and report throughput/latency.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --requests 500 [--neural ARCH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as CFG
+from repro.core import baselines as B
+from repro.core import losses as L
+from repro.core import trainer as T
+from repro.data import LogConfig, generate_log
+from repro.serving.batching import RankRequest
+from repro.serving.cascade_server import CascadeServer, NeuralScorer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=500)
+    ap.add_argument("--neural", default="",
+                    help="arch id for the neural final stage (smoke variant)")
+    ap.add_argument("--beta", type=float, default=5.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    log = generate_log(LogConfig(n_queries=800, seed=args.seed))
+    tr, te = log.split(0.8)
+    print("[serve] training cascade...")
+    params, cfg = B.fit_cloes(tr, lcfg=L.LossConfig(beta=args.beta),
+                              tcfg=T.TrainConfig(loss="l3", epochs=4, lr=0.01))
+    neural = None
+    if args.neural:
+        ncfg = dataclasses.replace(CFG.get_smoke(args.neural),
+                                   dtype=jnp.float32)
+        neural = NeuralScorer.create(ncfg, jax.random.PRNGKey(7))
+        print(f"[serve] neural final stage: {ncfg.name}")
+    srv = CascadeServer(params, cfg, neural_stage=neural)
+
+    rng = np.random.default_rng(args.seed)
+    n_te = te.x.shape[0]
+    t0 = time.time()
+    for i in range(args.requests):
+        qi = int(rng.integers(0, n_te))
+        n_items = int(rng.integers(8, 64))
+        srv.submit(RankRequest(
+            request_id=i, q_feat=te.q[qi].astype(np.float32),
+            item_feats=te.x[qi, :n_items].astype(np.float32),
+            m_q=int(te.m_q[qi])))
+    resps = srv.serve()
+    wall = time.time() - t0
+    lats = np.array([r.est_latency_ms for r in resps])
+    surv = np.array([r.survivors.sum() for r in resps])
+    print(f"[serve] {len(resps)} responses in {wall:.2f}s "
+          f"({len(resps)/wall:.0f} QPS on this host)")
+    print(f"[serve] modeled latency: mean {lats.mean():.1f}ms "
+          f"p95 {np.percentile(lats, 95):.1f}ms budget 130ms")
+    print(f"[serve] survivors/request: mean {surv.mean():.1f}")
+    over = (lats > 130).mean()
+    print(f"[serve] over-budget fraction: {over:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""Logical-axis -> mesh-axis rules and PartitionSpec derivation.
+
+Parameters carry logical axis names (see models/base.ParamTemplate); these
+rules translate them into PartitionSpecs on the production mesh.
+
+Two built-in rule sets:
+  "tp"   — Megatron-style tensor parallel: heads/ffn/vocab/experts over
+           `model`; everything else replicated. Default for serving.
+  "fsdp" — tp + parameters additionally sharded over the data axes on the
+           `embed` dim (weight-gathered FSDP); required for the big-MoE
+           training shapes where replicated optimizer state cannot fit.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.models.base import logical_specs
+
+TP_RULES = {
+    "qout": "model",
+    "kvout": "model",
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "embed": None,
+    "layers": None,
+}
+
+
+def fsdp_rules(mesh: Mesh) -> dict:
+    d = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    r = dict(TP_RULES)
+    r["embed"] = d if len(d) > 1 else (d[0] if d else None)
+    return r
+
+
+def zero3_rules(mesh: Mesh) -> dict:
+    """ZeRO-3: parameters fully sharded over ALL mesh axes on the embed dim,
+    no tensor parallelism. Weights are all-gathered per layer (O(P) bytes,
+    batch-independent); activations need no collectives at all. Wins over TP
+    whenever per-device batch is small relative to weight size — see
+    EXPERIMENTS.md §Perf (yi-34b train_4k iteration 3)."""
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    return {"qout": None, "kvout": None, "ff": None, "vocab": None,
+            "experts": "model",      # MoE experts stay expert-parallel
+            "embed": axes, "layers": None}
+
+
+def rules_for(mesh: Mesh, mode: str) -> dict:
+    if mode == "fsdp":
+        return fsdp_rules(mesh)
+    if mode == "zero3":
+        return zero3_rules(mesh)
+    return dict(TP_RULES)
+
+
+def _fits(dim: int, axes, mesh: Mesh) -> bool:
+    """jit in_shardings require exact divisibility — drop the mesh axis if
+    the dim doesn't divide (replicate instead)."""
+    if axes is None:
+        return True
+    return dim % _axes_size(mesh, axes) == 0
+
+
+def spec_from_axes(axes: tuple, shape: tuple, rules: dict, mesh: Mesh) -> PS:
+    """A mesh axis may appear at most once per spec: the first logical axis
+    that claims it wins (e.g. MoE expert weights (experts, embed, ff) shard
+    `experts` over model and leave `ff` replicated)."""
+    out, used = [], set()
+    for a, dim in zip(axes, shape):
+        mesh_axes = rules.get(a) if a is not None else None
+        flat = ((mesh_axes,) if isinstance(mesh_axes, str)
+                else tuple(mesh_axes or ()))
+        if any(m in used for m in flat) or not _fits(dim, mesh_axes, mesh):
+            out.append(None)
+        else:
+            out.append(mesh_axes)
+            used.update(flat)
+    return PS(*out)
+
+
+def param_shardings(templates, mesh: Mesh, mode: str = "tp"):
+    """NamedSharding tree matching the param tree."""
+    rules = rules_for(mesh, mode)
+    return jax.tree_util.tree_map(
+        lambda t: NamedSharding(mesh, spec_from_axes(t.axes, t.shape, rules,
+                                                     mesh)),
+        templates)
+
+
+# ---------------------------------------------------------------------------
+# Data shardings: batch over (pod, data); caches batch-sharded on dim 1
+# (dim 0 is the stacked layer axis); kv-head dim sharded over model.
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh: Mesh):
+    d = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return d if len(d) > 1 else (d[0] if d else None)
+
+
+def batch_shardings(batch_specs: dict, mesh: Mesh, *, batch_dim: int = 0):
+    """Tokens/targets/frontend: shard the batch dim over (pod, data)."""
+    ba = _batch_axes(mesh)
+
+    def one(s):
+        spec = [None] * len(s.shape)
+        if s.shape[batch_dim] % _axes_size(mesh, ba) == 0:
+            spec[batch_dim] = ba
+        return NamedSharding(mesh, PS(*spec))
+
+    return jax.tree_util.tree_map(one, batch_specs)
+
+
+def cache_shardings(cache_specs: dict, mesh: Mesh, policy: str = "heads"):
+    """Serving caches, by entry name:
+
+    KV-like (k/v/gk/gv/lk/lv/tlk/tlv/cross_k/cross_v/attn_k/attn_v) with
+    shape (..., B, S, Hkv, hd): batch dim (rank-4) over the data axes when
+    divisible; Hkv over model, falling back to hd over model when the head
+    count doesn't divide (within-head split, matching the flattened kvout
+    weight sharding). SSM/RWKV states: head dim over model; shift/conv
+    states: channel dim over model.
+    """
+    ba = _batch_axes(mesh)
+    n_data = _axes_size(mesh, ba)
+    n_model = mesh.shape["model"]
+
+    def one(path, s):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = s.shape
+        spec = [None] * len(shape)
+        if name in ("k", "v", "gk", "gv", "lk", "lv", "tlk", "tlv",
+                    "cross_k", "cross_v", "attn_k", "attn_v"):
+            bdim = len(shape) - 4
+            if shape[bdim] % n_data == 0 and shape[bdim] > 1:
+                spec[bdim] = ba
+            if policy == "seq" and shape[-3] % n_model == 0:
+                spec[-3] = "model"            # KV sequence over model
+            elif shape[-2] % n_model == 0:
+                spec[-2] = "model"
+            elif shape[-1] % n_model == 0:
+                spec[-1] = "model"
+        elif name in ("ssm", "wkv"):       # (L, B, nh, hd, N)/(L, B, nh, hd, hd)
+            if shape[1] % n_data == 0 and shape[1] > 1:
+                spec[1] = ba
+            if shape[2] % n_model == 0:
+                spec[2] = "model"
+        else:                               # conv / tm_shift / cm_shift
+            if shape[1] % n_data == 0 and shape[1] > 1:
+                spec[1] = ba
+            if shape[-1] % n_model == 0:
+                spec[-1] = "model"
+        return NamedSharding(mesh, PS(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PS())

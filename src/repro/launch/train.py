@@ -1,0 +1,120 @@
+"""Training launcher.
+
+Two paths:
+  * `--target cloes`  — train the paper's cascade on the synthetic log with
+    data-parallel pjit over whatever mesh is available (1 CPU device here;
+    (pod, data) axes on the production mesh). The loss's per-query
+    reductions are group-local, so data parallelism is a pure batch shard +
+    gradient all-reduce.
+  * `--target lm --arch <id>` — train a (reduced) assigned architecture as
+    the neural final-stage ranker substrate.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --target cloes --epochs 6
+  PYTHONPATH=src python -m repro.launch.train --target lm --arch starcoder2-3b \
+      --smoke --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.core import baselines as B
+from repro.core import losses as L
+from repro.core import trainer as T
+from repro.data import LogConfig, generate_log
+
+
+def train_cloes(args) -> None:
+    log = generate_log(LogConfig(n_queries=args.queries, seed=args.seed))
+    tr, te = log.split(0.8)
+    lcfg = L.LossConfig(beta=args.beta)
+    devices = jax.devices()
+    print(f"[train] CLOES on {len(devices)} device(s), "
+          f"{tr.n_instances} instances")
+    t0 = time.time()
+    params, cfg = B.fit_cloes(
+        tr, lcfg=lcfg,
+        tcfg=T.TrainConfig(loss="l3", epochs=args.epochs, lr=args.lr,
+                           batch_groups=args.batch_groups))
+    print(f"[train] done in {time.time()-t0:.1f}s")
+    for split, data in [("train", tr), ("test", te)]:
+        m = T.evaluate(params, cfg, data, lcfg)
+        print(f"[eval:{split}] " + " ".join(f"{k}={v:.4f}" for k, v in m.items()))
+    if args.save:
+        from repro.checkpoint import save_pytree
+        save_pytree(args.save, {"params": params,
+                                "lcfg": dataclasses.asdict(lcfg)})
+        print(f"[ckpt] saved to {args.save}")
+
+
+def train_lm(args) -> None:
+    import repro.configs as CFG
+    from repro.models import base as MB
+    from repro.models import zoo as Z
+    from repro.optim import adam
+
+    cfg = CFG.get_smoke(args.arch) if args.smoke else CFG.get(args.arch)
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32 if args.smoke else cfg.dtype)
+    key = jax.random.PRNGKey(args.seed)
+    params = MB.materialize(Z.templates(cfg), key)
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree_util.tree_leaves(params))
+    print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, {args.steps} steps")
+    opt = adam(args.lr)
+    opt_state = opt.init(params)
+    rng = np.random.default_rng(args.seed)
+    bsz, s = args.batch, args.seq
+    step_fn = jax.jit(lambda p, o, b: Z.train_step(p, o, b, cfg, opt.update))
+    t0 = time.time()
+    for step in range(args.steps):
+        tok = rng.integers(0, cfg.vocab, (bsz, s + 1))
+        batch = {"tokens": jnp.asarray(tok[:, :-1]),
+                 "targets": jnp.asarray(tok[:, 1:])}
+        if cfg.arch_type == "encdec":
+            batch["frontend"] = jnp.asarray(
+                0.1 * rng.normal(size=(bsz, 16, cfg.d_model)), jnp.float32)
+        elif cfg.frontend_positions:
+            p_ = cfg.frontend_positions
+            batch["frontend"] = jnp.asarray(
+                0.1 * rng.normal(size=(bsz, p_, cfg.d_model)), jnp.float32)
+            batch["tokens"] = batch["tokens"][:, :s - p_]
+            batch["targets"] = batch["targets"][:, :s - p_]
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        if step % max(1, args.steps // 10) == 0:
+            print(f"  step {step:4d} loss {float(loss):.4f} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+    print(f"[train] final loss {float(loss):.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target", choices=["cloes", "lm"], default="cloes")
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--queries", type=int, default=1200)
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch-groups", type=int, default=64)
+    ap.add_argument("--beta", type=float, default=5.0)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default="")
+    args = ap.parse_args()
+    if args.target == "cloes":
+        train_cloes(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Model-zoo configuration and the parameter-template system.
+
+Every architecture is described by one frozen ModelConfig. Parameters are
+declared as *templates* — (shape, logical axes, init) — from which we derive:
+
+  * materialized params        (smoke tests / real training)
+  * jax.ShapeDtypeStruct trees (the multi-pod dry-run; no allocation)
+  * PartitionSpec trees        (logical axes -> mesh axes via launch/sharding)
+
+Layer parameters are STACKED on a leading "layers" axis and the forward pass
+scans over them (jax.lax.scan), keeping HLO size ~O(1) in depth — essential
+for compiling 62-layer models with 512 virtual devices on one CPU host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+ARCH_TYPES = ("dense", "moe", "ssm", "hybrid", "encdec")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                    # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    mlp_act: str = "swiglu"           # swiglu | gelu
+    tie_embeddings: bool = False
+    # local/global attention pattern (gemma3): window size + 1 global per N
+    sliding_window: int = 0           # 0 = full attention everywhere
+    global_every: int = 0             # e.g. 6 -> layers 5, 11, ... are global
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_d_ff: int = 0                 # expert hidden size (d_ff if 0)
+    dense_residual: bool = False      # arctic: dense MLP in parallel with MoE
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    # RWKV6
+    rwkv: bool = False
+    rwkv_head_dim: int = 64
+    rwkv_lora_dim: int = 64
+    # hybrid (zamba2): shared attention block applied every `attn_every` SSM
+    # layers, weights shared across applications
+    attn_every: int = 0
+    # attention-activation partitioning policy: "auto" lets GSPMD choose
+    # (baseline; pathological when head counts don't divide the model axis),
+    # "seqkv" constrains K/V (and the score tensor) to be sharded over the
+    # KV-sequence dim on the model axis — sharded-softmax attention with
+    # O(B*H*S) collectives instead of O(B*H*S^2). See EXPERIMENTS.md §Perf.
+    attn_shard: str = "auto"
+    # SSM sequence-mixing implementation: "scan" = faithful sequential
+    # recurrence (baseline); "chunked" = Mamba2's SSD chunked form (scan
+    # depth S -> S/128, MXU-shaped intra-chunk matmuls). See §Perf zamba2.
+    ssm_impl: str = "scan"
+    # encoder-decoder (seamless)
+    n_enc_layers: int = 0
+    # modality frontend stub: inputs arrive as precomputed embeddings of this
+    # many positions prepended to the text tokens (pixtral) or as the encoder
+    # input (seamless). 0 = pure text.
+    frontend_positions: int = 0
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def is_global_layer(self, i: int) -> bool:
+        """gemma3-style 5:1 pattern: every `global_every`-th layer is global."""
+        if not self.sliding_window or not self.global_every:
+            return not self.sliding_window
+        return (i + 1) % self.global_every == 0
+
+    def param_count(self) -> int:
+        """Total parameter count (for 6ND roofline math)."""
+        return sum(int(np.prod(t.shape)) for t in
+                   jax.tree_util.tree_leaves(self.templates()))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        total = 0
+        for t in jax.tree_util.tree_leaves(self.templates()):
+            n = int(np.prod(t.shape))
+            if t.axes and "experts" in t.axes and self.n_experts:
+                n = n * self.top_k // self.n_experts
+            total += n
+        return total
+
+    def templates(self):
+        from repro.models import zoo
+        return zoo.templates(self)
+
+
+# ---------------------------------------------------------------------------
+# Parameter templates
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamTemplate:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]      # logical axis name per dim (None = replicated)
+    init: str = "normal"              # normal | zeros | ones | small
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def materialize(templates, key: jax.Array, dtype=jnp.float32):
+    """Instantiate real parameters from a template tree (smoke tests/training)."""
+    leaves, treedef = jax.tree_util.tree_flatten(templates)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(t: ParamTemplate, k):
+        if t.init == "zeros":
+            return jnp.zeros(t.shape, dtype)
+        if t.init == "ones":
+            return jnp.ones(t.shape, dtype)
+        fan_in = t.shape[-1] if len(t.shape) > 1 else 1
+        scale = t.scale if t.init == "normal" else t.scale / np.sqrt(fan_in)
+        return (scale * jax.random.normal(k, t.shape)).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(t, k) for t, k in zip(leaves, keys)])
+
+
+def shape_structs(templates, dtype):
+    """ShapeDtypeStruct tree for dry-run lowering (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, dtype), templates)
+
+
+def logical_specs(templates):
+    """Tree of logical-axis tuples, same structure as params."""
+    return jax.tree_util.tree_map(lambda t: t.axes, templates)
+
+
+def stack_templates(t: ParamTemplate, n: int) -> ParamTemplate:
+    """Add a leading stacked-layers dim (scanned, never sharded)."""
+    return ParamTemplate((n,) + t.shape, ("layers",) + t.axes, t.init, t.scale)
+
+
+def stack_tree(tree, n: int):
+    return jax.tree_util.tree_map(lambda t: stack_templates(t, n), tree)

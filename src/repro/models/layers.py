@@ -1,0 +1,785 @@
+"""Functional building blocks for the architecture zoo.
+
+Pure functions over explicit parameter dicts. Conventions:
+  x: (B, S, d_model) activations
+  attention weights stored 2-D flattened (d_model, H*hd) so sharding rules
+  stay simple; heads are recovered by reshape inside the op.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as _P
+
+_U = _P.UNCONSTRAINED
+
+
+def _seq_shard(x, dim: int):
+    """Constrain dim `dim` of x to be sharded over the 'model' mesh axis,
+    leaving every other dim unconstrained. Only valid under a mesh context
+    (the launch/dryrun path); single-device tests never enable seqkv."""
+    spec = [_U] * x.ndim
+    spec[dim] = "model"
+    return jax.lax.with_sharding_constraint(x, _P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Norms and activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def swiglu(x, wg, wi, wo):
+    return (jax.nn.silu(x @ wg) * (x @ wi)) @ wo
+
+
+def gelu_mlp(x, wi, wo):
+    return jax.nn.gelu(x @ wi) @ wo
+
+
+def mlp(x, p, act: str):
+    if act == "swiglu":
+        return swiglu(x, p["wg"], p["wi"], p["wo"])
+    return gelu_mlp(x, p["wi"], p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: (B, S, H, hd), positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm, sliding window, blockwise for long seq)
+# ---------------------------------------------------------------------------
+
+_BLOCKWISE_THRESHOLD = 8192   # use online-softmax KV chunking above this
+_KV_CHUNK = 1024
+NO_WINDOW = 1 << 30           # sentinel: window may be a *traced* per-layer
+                              # int (gemma3 5:1 schedule inside lax.scan), so
+                              # "no window" is a huge int, never a python None
+
+
+def _expand_kv(k, n_rep: int):
+    """(B, S, Hkv, hd) -> (B, S, Hkv*n_rep, hd) by repeat (GQA)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d)
+
+
+def _attn_mask(q_pos, k_pos, causal: bool, window):
+    """(Sq, Sk) boolean mask, True = attend. `window` may be a traced int
+    (per-layer schedule scanned over); NO_WINDOW disables the bound."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def dot_attention(q, k, v, *, causal: bool, window=NO_WINDOW,
+                  q_offset: int = 0, seq_sharded: bool = False):
+    """Full materialized attention. q: (B,Sq,H,hd), k/v: (B,Sk,Hkv,hd).
+
+    seq_sharded: pin the score/prob tensors to stay sharded over the KV
+    dim on the model axis (sharded-softmax; see ModelConfig.attn_shard)."""
+    b, sq, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    k = _expand_kv(k, h // hkv)
+    v = _expand_kv(v, h // hkv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    if seq_sharded:
+        scores = _seq_shard(scores, 3)
+    q_pos = q_offset + jnp.arange(sq)
+    mask = _attn_mask(q_pos, jnp.arange(sk), causal, window)
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    if seq_sharded:
+        probs = _seq_shard(probs, 3)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window=NO_WINDOW,
+                        q_offset: int = 0, kv_chunk: int = _KV_CHUNK,
+                        k_offset: int = 0, return_stats: bool = False,
+                        pvary_axes: tuple = ()):
+    """Online-softmax attention, scanning KV in chunks: O(Sq*chunk) memory
+    instead of O(Sq*Sk). Flash-attention recurrence in pure JAX (the Pallas
+    kernel covers the decode hot path; this covers long prefill)."""
+    b, sq, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    n_rep = h // hkv
+    pad = (-sk) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // kv_chunk
+    kc = k.reshape(b, n_chunks, kv_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(sq)
+    qf = q.astype(jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, idx = xs
+        kb = _expand_kv(kb, n_rep)
+        vb = _expand_kv(vb, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+        s = s / math.sqrt(hd)
+        k_pos = k_offset + idx * kv_chunk + jnp.arange(kv_chunk)
+        mask = (_attn_mask(q_pos, k_pos, causal, window)
+                & (k_pos < k_offset + sk)[None, :])
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        scale = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * scale + p.sum(-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    # derive the init carry from q so it inherits q's varying manual axes
+    # when running inside shard_map (fresh constants would be unvarying and
+    # fail scan's carry-type check)
+    qt = qf.transpose(0, 2, 1, 3)                        # (B, H, Sq, hd)
+    init = (qt[..., 0] * 0.0 - jnp.inf,
+            qt[..., 0] * 0.0,
+            qt * 0.0)
+    if pvary_axes:
+        init = jax.tree_util.tree_map(
+            lambda a: jax.lax.pvary(a, pvary_axes), init)
+    (m, l, acc), _ = jax.lax.scan(body, init, (kc, vc, jnp.arange(n_chunks)))
+    if return_stats:
+        return m, l, acc                                  # (B,H,Sq)(B,H,Sq)(B,H,Sq,hd)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)     # (B, Sq, H, hd)
+
+
+# Distribution context for the shard_map attention variant: the launcher
+# sets this to the active device mesh before tracing (model code cannot
+# recover the concrete mesh from inside a jit trace).
+MESH = None
+
+
+def shmap_attention(q, k, v, *, causal: bool, window=NO_WINDOW,
+                    q_offset: int = 0):
+    """Sharded-softmax attention via an explicit shard_map over the model
+    axis: K/V are sharded on the sequence dim; each shard computes local
+    online-softmax stats (blockwise, memory-bounded) and the shards combine
+    with three O(B*H*Sq)/O(B*Sq*H*hd) psums — no O(S^2) collectives, by
+    construction. Batch stays sharded over the data axes."""
+    mesh = MESH
+    assert mesh is not None, "layers.MESH must be set for attn_shard='shmap'"
+    from jax.sharding import PartitionSpec as P
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    n_model = mesh.shape["model"]
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = ba if len(ba) > 1 else (ba[0] if ba else None)
+    bshard = bspec if (bspec and b % _axes_size_named(mesh, ba) == 0) else None
+
+    def local(qs, ks, vs):
+        shard = jax.lax.axis_index("model")
+        k_off = shard * (sk // n_model)
+        m, l, acc = blockwise_attention(
+            qs, ks, vs, causal=causal, window=window, q_offset=q_offset,
+            kv_chunk=min(_KV_CHUNK, max(ks.shape[1] // 4, 8)),
+            k_offset=k_off, return_stats=True, pvary_axes=("model",))
+        # the softmax shift is value-invariant (cancels in acc/l), so the
+        # max path carries no gradient — stop_gradient both sides (pmax has
+        # no differentiation rule, and none is needed)
+        m = jax.lax.stop_gradient(m)
+        m_g = jax.lax.stop_gradient(jax.lax.pmax(m, "model"))
+        scale = jnp.exp(m - m_g)
+        # guard fully-masked shards (m = -inf): contribute zeros
+        scale = jnp.where(jnp.isfinite(m), scale, 0.0)
+        l_g = jax.lax.psum(l * scale, "model")          # (B,H,Sq) f32, small
+        # cross the wire in bf16: local accumulation stays f32; the combine
+        # psum halves its bytes (production flash-decode convention)
+        acc_g = jax.lax.psum(
+            (acc * scale[..., None]).astype(jnp.bfloat16), "model")
+        out = acc_g.astype(jnp.float32) / jnp.maximum(l_g, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3).astype(qs.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bshard), P(bshard, "model"), P(bshard, "model")),
+        out_specs=P(bshard))(q, k, v)
+
+
+def _axes_size_named(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def attention(p, cfg, x, *, positions, causal: bool = True, window=NO_WINDOW,
+              kv_cache: dict | None = None, cache_len=None,
+              cross_kv: tuple | None = None, mode: str = "decode",
+              ring_window: int = 0):
+    """Full attention op: projections + rope + (cached) attention + out proj.
+
+    kv_cache: {"k","v"}: (B, S_max, Hkv, hd) + current write offset cache_len.
+    mode: "decode" attends q against the WHOLE cache (valid_len masked);
+          "prefill" writes the fresh K/V into the cache but attends only
+          against the fresh keys (cache starts empty), so long prompts use
+          the blockwise online-softmax path instead of materializing S^2.
+    cross_kv: precomputed (k, v) for encoder-decoder cross attention.
+    Returns (out, new_kv_cache).
+    """
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    if cross_kv is None:
+        k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+        v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    else:
+        k, v = cross_kv
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        if cross_kv is None:
+            k = rms_norm(k, p["k_norm"])
+    if cross_kv is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if getattr(cfg, "attn_shard", "auto") == "seqkv" and kv_cache is None:
+        # sharded-softmax attention: K/V sequence over the model axis
+        k = _seq_shard(k, 1)
+        v = _seq_shard(v, 1)
+    new_cache = None
+    q_offset = 0
+    if kv_cache is not None and ring_window:
+        # sliding-window ring-buffer cache: (B, W, Hkv, hd); slot = pos % W.
+        w = ring_window
+        if mode == "prefill":
+            fn = (blockwise_attention if s > _BLOCKWISE_THRESHOLD
+                  else dot_attention)
+            out = fn(q, k, v, causal=causal, window=w)
+            m = min(s, w)
+            pos_tail = jnp.arange(s - m, s)
+            slots = pos_tail % w
+            ck = kv_cache["k"].at[:, slots].set(
+                k[:, -m:].astype(kv_cache["k"].dtype))
+            cv = kv_cache["v"].at[:, slots].set(
+                v[:, -m:].astype(kv_cache["v"].dtype))
+        else:
+            slot = cache_len % w
+            ck = jax.lax.dynamic_update_slice(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype), (0, slot, 0, 0))
+            kpos = ring_slot_positions(cache_len + s, w)
+            out = decode_attention(q, ck, cv, q_offset=cache_len, window=w,
+                                   k_pos=kpos)
+        out = out.reshape(b, s, h * hd) @ p["wo"]
+        return out, {"k": ck, "v": cv}
+    if kv_cache is not None:
+        # decode / incremental prefill: write new K/V at cache_len
+        ck = jax.lax.dynamic_update_slice(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), (0, cache_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), (0, cache_len, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        if getattr(cfg, "attn_shard", "auto") == "seqkv":
+            ck = _seq_shard(ck, 1)
+            cv = _seq_shard(cv, 1)
+        if mode == "prefill":
+            if (getattr(cfg, "attn_shard", "auto") == "shmap"
+                    and MESH is not None
+                    and k.shape[1] % MESH.shape["model"] == 0):
+                out = shmap_attention(q, k, v, causal=causal, window=window)
+            else:
+                fn = (blockwise_attention if s > _BLOCKWISE_THRESHOLD
+                      else dot_attention)
+                out = fn(q, k, v, causal=causal, window=window)
+        else:
+            out = decode_attention(q, ck, cv, q_offset=cache_len,
+                                   window=window, valid_len=cache_len + s)
+    elif cross_kv is not None:
+        fn = blockwise_attention if k.shape[1] > _BLOCKWISE_THRESHOLD else dot_attention
+        out = fn(q, k, v, causal=False)
+    elif getattr(cfg, "attn_shard", "auto") == "shmap" and MESH is not None \
+            and k.shape[1] % MESH.shape["model"] == 0:
+        out = shmap_attention(q, k, v, causal=causal, window=window)
+    else:
+        if s > _BLOCKWISE_THRESHOLD:
+            out = blockwise_attention(q, k, v, causal=causal, window=window)
+        else:
+            out = dot_attention(
+                q, k, v, causal=causal, window=window,
+                seq_sharded=getattr(cfg, "attn_shard", "auto") == "seqkv")
+    out = out.reshape(b, s, h * hd) @ p["wo"]
+    return out, new_cache
+
+
+def decode_attention(q, k, v, *, q_offset, window=NO_WINDOW, valid_len=None,
+                     k_pos=None):
+    """Attention of few query tokens against a long KV cache (decode path).
+    Reference implementation; the Pallas swa_decode kernel is the optimized
+    TPU version wired in via kernels/ops.py.
+
+    k_pos: optional explicit (Sk,) positions of the cache slots — used by the
+    ring-buffer sliding-window cache, where slot s holds the most recent
+    position congruent to s mod W.
+
+    GQA is computed with grouped-head einsums — the K/V expansion is never
+    materialized (a broadcast of the sharded cache makes GSPMD all-gather
+    the whole cache per layer; see EXPERIMENTS.md §Perf decode note)."""
+    b, sq, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, sq, hkv, rep, hd).astype(jnp.float32)
+    s = jnp.einsum("bqgrd,bsgd->bgrqs", qg,
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = q_offset + jnp.arange(sq)
+    if k_pos is None:
+        k_pos = jnp.arange(sk)
+    mask = (q_pos[:, None] >= k_pos[None, :]) & (k_pos >= 0)[None, :]
+    mask &= q_pos[:, None] - k_pos[None, :] < window
+    if valid_len is not None:
+        mask &= (k_pos < valid_len)[None, :]
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqs,bsgd->bqgrd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def ring_slot_positions(cache_len, window: int):
+    """Positions held by each ring-buffer slot: the most recent position
+    p < cache_len with p ≡ s (mod W); -1 if no such position exists yet."""
+    s = jnp.arange(window)
+    p = s + ((cache_len - 1 - s) // window) * window
+    return jnp.where(p >= 0, p, -1)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts: capacity-based scatter dispatch (no giant one-hots)
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn(p, cfg, x):
+    """Token-choice top-k MoE with capacity-factor scatter dispatch.
+
+    x: (B, S, d). Experts are sharded over the "model" mesh axis; the
+    scatter/gather to the (E, C, d) expert buffer is where XLA emits the
+    all-to-all-like collectives.
+    Returns (out, aux_loss) where aux is the load-balance loss (Switch-style).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_v, gate_i = jax.lax.top_k(probs, k)                   # (T, k)
+    gate_v = gate_v / jnp.maximum(gate_v.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(max(1, math.ceil(cfg.capacity_factor * t * k / e)))
+    flat_e = gate_i.reshape(-1)                                # (T*k,)
+    # position of each (token, choice) within its expert, via cumsum of
+    # one-hot memberships (stable, no sort)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # (T*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = pos < cap
+    safe_pos = jnp.where(keep, pos, cap)                       # cap -> dropped
+
+    buf = jnp.zeros((e, cap + 1, d), xt.dtype)
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    buf = buf.at[flat_e, safe_pos].set(xt[tok_idx], mode="drop")
+    buf = buf[:, :cap]                                         # (E, C, d)
+
+    hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    hidden = hidden * jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    out_buf = jnp.einsum("ecf,efd->ecd", hidden, p["w_out"])   # (E, C, d)
+
+    gathered = out_buf[flat_e, safe_pos]                       # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    y = (gathered.reshape(t, k, d)
+         * gate_v.reshape(t, k, 1).astype(gathered.dtype)).sum(axis=1)
+
+    # Switch-transformer load-balance aux loss
+    me = probs.mean(axis=0)                                    # (E,)
+    ce = jax.nn.one_hot(gate_i[:, 0], e).mean(axis=0)
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b, s, d), aux
+
+
+def moe_ffn_shmap(p, cfg, x):
+    """Expert-parallel MoE via explicit shard_map over the model axis.
+
+    Activations are replicated over `model` (batch lives on the data axes),
+    so every model rank already holds all tokens of its data shard: each
+    rank routes locally, runs ONLY its own experts, and a single psum of the
+    (tokens, d) output combines the top-k expert contributions. Collectives:
+    one O(T*d) psum per layer — no dispatch all-gather/all-to-all at all.
+    (GSPMD's auto-partitioning of the scatter dispatch all-gathers the
+    (E, C, d) buffer to every device; see EXPERIMENTS.md §Perf dbrx.)"""
+    mesh = MESH
+    assert mesh is not None
+    from jax.sharding import PartitionSpec as P
+    b, s_, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n_model = mesh.shape["model"]
+    e_loc = e // n_model
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = ba if len(ba) > 1 else (ba[0] if ba else None)
+    bshard = bspec if (bspec and b % _axes_size_named(mesh, ba) == 0) else None
+
+    def local(xs, router, wg, wi, wo):
+        bl, sl, _ = xs.shape
+        t = bl * sl
+        xt = xs.reshape(t, d)
+        logits = (xt @ router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_v, gate_i = jax.lax.top_k(probs, k)
+        gate_v = gate_v / jnp.maximum(gate_v.sum(-1, keepdims=True), 1e-9)
+        shard = jax.lax.axis_index("model")
+        e0 = shard * e_loc
+        cap = int(max(1, math.ceil(cfg.capacity_factor * t * k / e)))
+        flat_e = gate_i.reshape(-1)
+        tok_idx = jnp.repeat(jnp.arange(t), k)
+        is_local = (flat_e >= e0) & (flat_e < e0 + e_loc)
+        loc_e = jnp.where(is_local, flat_e - e0, e_loc)       # e_loc = drop row
+        onehot = jax.nn.one_hot(loc_e, e_loc + 1, dtype=jnp.int32)
+        pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                                  loc_e[:, None], axis=1)[:, 0]
+        keep = is_local & (pos < cap)
+        safe_e = jnp.where(keep, loc_e, e_loc)
+        safe_pos = jnp.where(keep, pos, cap)
+        buf = jnp.zeros((e_loc + 1, cap + 1, d), xt.dtype)
+        buf = buf.at[safe_e, safe_pos].set(xt[tok_idx], mode="drop")
+        buf = buf[:e_loc, :cap]
+        hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg))
+        hidden = hidden * jnp.einsum("ecd,edf->ecf", buf, wi)
+        out_buf = jnp.einsum("ecf,efd->ecd", hidden, wo)
+        gathered = out_buf[jnp.clip(safe_e, 0, e_loc - 1), jnp.clip(safe_pos, 0, cap - 1)]
+        gathered = jnp.where(keep[:, None], gathered, 0.0)
+        y = (gathered.reshape(t, k, d)
+             * gate_v.reshape(t, k, 1).astype(gathered.dtype)).sum(axis=1)
+        y = jax.lax.psum(y.astype(jnp.bfloat16), "model")
+        me = probs.mean(axis=0)
+        ce = jax.nn.one_hot(gate_i[:, 0], e).mean(axis=0)
+        aux = e * jnp.sum(me * ce)
+        # make replication statically inferable for the P() out_spec:
+        # aux varies over the data axes only (x is model-replicated)
+        ba_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        aux = jax.lax.pmean(aux, ba_axes)
+        return y.reshape(bl, sl, d), aux
+
+    y, aux = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bshard), P(), P("model"), P("model"), P("model")),
+        out_specs=(P(bshard), P()))(
+            x, p["router"], p["w_gate"], p["w_in"], p["w_out"])
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block — recurrent form; supports full-sequence scan and
+# single-step decode with explicit (conv_state, ssm_state) caches.
+# ---------------------------------------------------------------------------
+
+
+def mamba2_scan(p, cfg, x, state: dict | None = None):
+    """x: (B, S, d_model). Returns (y, new_state).
+
+    state: {"conv": (B, conv-1, d_conv_in), "ssm": (B, H, hd, N)}.
+    """
+    b, s, d = x.shape
+    di, n, hdim = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = cfg.ssm_heads
+    zxbcdt = x @ p["in_proj"]                                  # (B,S,·)
+    z, xc, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)           # (B,S,di+2n)
+    kw = cfg.ssm_conv
+    if state is not None:
+        full = jnp.concatenate([state["conv"], conv_in], axis=1)
+        new_conv_state = full[:, -(kw - 1):]
+    else:
+        full = jnp.pad(conv_in, ((0, 0), (kw - 1, 0), (0, 0)))
+        new_conv_state = full[:, -(kw - 1):]
+    # depthwise causal conv1d
+    idx = jnp.arange(s)[:, None] + jnp.arange(kw)[None, :]     # (S, kw)
+    windows = full[:, idx]                                     # (B,S,kw,di+2n)
+    conv = jnp.einsum("bskc,kc->bsc", windows, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    xc, Bc, Cc = jnp.split(conv, [di, di + n], axis=-1)
+    xh = xc.reshape(b, s, nh, hdim)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                    # (B,S,nh)
+    decay = jnp.exp(-jnp.exp(p["A_log"])[None, None] * dt)     # (B,S,nh)
+
+    def step(carry, xs):
+        S_ = carry                                             # (B,nh,hd,N)
+        xh_t, B_t, C_t, dt_t, dec_t = xs
+        dBx = jnp.einsum("bhp,bn,bh->bhpn", xh_t, B_t, dt_t)
+        S_ = S_ * dec_t[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", S_, C_t)
+        return S_, y
+
+    init = (state["ssm"] if state is not None
+            else jnp.zeros((b, nh, hdim, n), jnp.float32))
+    xs = (xh.transpose(1, 0, 2, 3).astype(jnp.float32),
+          Bc.transpose(1, 0, 2).astype(jnp.float32),
+          Cc.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          decay.transpose(1, 0, 2).astype(jnp.float32))
+    final_S, ys = jax.lax.scan(step, init, xs)
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)               # (B,S,nh,hd)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = rms_norm(y, p["out_norm"]) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv_state, "ssm": final_S}
+
+
+def mamba2_chunked(p, cfg, x, state: dict | None = None, chunk: int = 128):
+    """Chunked SSD form of the Mamba2 mixer (the Mamba2 paper's own
+    algorithm): within a chunk the recurrence is expanded into a masked
+    decay-weighted "attention" matmul (MXU work), and only the per-chunk
+    states are carried sequentially — scan depth S -> S/chunk (32768 -> 256
+    for prefill_32k). Numerically identical to mamba2_scan (same SSD
+    operator, log-space decay ratios); validated in tests."""
+    b, s, d = x.shape
+    di, n, hdim = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = cfg.ssm_heads
+    zxbcdt = x @ p["in_proj"]
+    z, xc, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    kw = cfg.ssm_conv
+    if state is not None:
+        full = jnp.concatenate([state["conv"], conv_in], axis=1)
+    else:
+        full = jnp.pad(conv_in, ((0, 0), (kw - 1, 0), (0, 0)))
+    new_conv_state = full[:, -(kw - 1):]
+    idx = jnp.arange(s)[:, None] + jnp.arange(kw)[None, :]
+    conv = jnp.einsum("bskc,kc->bsc", full[:, idx], p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    xc, Bc, Cc = jnp.split(conv, [di, di + n], axis=-1)
+    xh = xc.reshape(b, s, nh, hdim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"]).astype(jnp.float32)    # (B,S,nh)
+    la = (-jnp.exp(p["A_log"].astype(jnp.float32))[None, None] * dt)  # log a_t
+
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // chunk
+    resh = lambda a: a.reshape((b, nc, chunk) + a.shape[2:])
+    xh, Bf, Cf, dtc, lac = map(resh, (xh, Bc.astype(jnp.float32),
+                                      Cc.astype(jnp.float32), dt, la))
+
+    cum = jnp.cumsum(lac, axis=2)                        # (B,nc,L,nh) log P_t
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_body(S_prev, xs):
+        xh_c, B_c, C_c, dt_c, cum_c = xs                 # (B,L,...) one chunk
+        # intra-chunk: M[t,i] = (C_t.B_i) dt_i exp(cum_t - cum_i), i <= t
+        cb = jnp.einsum("btn,bin->bti", C_c, B_c)        # (B,L,L)
+        dh = cum_c.transpose(0, 2, 1)                    # (B,nh,L)
+        ratio = jnp.exp(jnp.clip(dh[:, :, :, None] - dh[:, :, None, :],
+                                 -60.0, 0.0))
+        m = (cb[:, None] * dt_c.transpose(0, 2, 1)[:, :, None, :]
+             * ratio * causal[None, None])               # (B,nh,L,L)
+        y = jnp.einsum("bhti,bihp->bthp", m, xh_c)
+        # inter-chunk: contribution of the carried state
+        y = y + jnp.einsum("btn,bhpn->bthp", C_c,
+                           S_prev) * jnp.exp(cum_c)[..., None]
+        # chunk state: S_end = P_L S_prev + sum_i (P_L/P_i) dt_i B_i x_i
+        w = jnp.exp(jnp.clip(cum_c[:, -1:, :] - cum_c, -60.0, None)) * dt_c
+        S_in = jnp.einsum("bih,bin,bihp->bhpn", w, B_c, xh_c)
+        S_new = S_prev * jnp.exp(cum_c[:, -1])[..., None, None] + S_in
+        return S_new, y
+
+    init = (state["ssm"] if state is not None
+            else jnp.zeros((b, nh, hdim, n), jnp.float32))
+    xs = tuple(a.transpose(1, 0, *range(2, a.ndim)) for a in
+               (xh, Bf, Cf, dtc, cum))
+    final_S, ys = jax.lax.scan(chunk_body, init, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, nh, hdim)[:, :s]
+    y = y.astype(x.dtype) + xc.reshape(b, s, nh, hdim).astype(x.dtype) \
+        * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = rms_norm(y, p["out_norm"]) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv_state, "ssm": final_S}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): time-mix with data-dependent decay + channel-mix.
+# ---------------------------------------------------------------------------
+
+
+def _lora(x, A, B):          # low-rank adapter: x @ A @ B
+    return (x @ A) @ B
+
+
+def rwkv6_timemix(p, cfg, x, state: dict | None = None):
+    """x: (B, S, d). state: {"shift": (B, d), "wkv": (B, H, hd, hd)}."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    if state is not None:
+        prev = jnp.concatenate([state["shift"][:, None], x[:, :-1]], axis=1)
+        new_shift = x[:, -1]
+    else:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        new_shift = x[:, -1]
+    dx = prev - x
+    # data-dependent token-shift interpolation (the Finch contribution)
+    xr = x + dx * (p["mu_r"] + _lora(x, p["lr_A"], p["lr_B"]))
+    xk = x + dx * (p["mu_k"] + _lora(x, p["lk_A"], p["lk_B"]))
+    xv = x + dx * (p["mu_v"] + _lora(x, p["lv_A"], p["lv_B"]))
+    xw = x + dx * (p["mu_w"] + _lora(x, p["lw_A"], p["lw_B"]))
+    xg = x + dx * (p["mu_g"] + _lora(x, p["lg_A"], p["lg_B"]))
+    r = (xr @ p["wr"]).reshape(b, s, nh, hd)
+    k = (xk @ p["wk"]).reshape(b, s, nh, hd)
+    v = (xv @ p["wv"]).reshape(b, s, nh, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent per-channel decay w in (0,1)
+    w = jnp.exp(-jnp.exp(
+        (p["w0"] + _lora(xw, p["ww_A"], p["ww_B"])).astype(jnp.float32)))
+    w = w.reshape(b, s, nh, hd)
+    u = p["u"].reshape(nh, hd)
+
+    def step(S_, xs):
+        r_t, k_t, v_t, w_t = xs                                # (B,nh,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)             # (B,nh,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + u[None, :, :, None] * kv)
+        S_ = S_ * w_t[..., None] + kv
+        return S_, y
+
+    init = (state["wkv"] if state is not None
+            else jnp.zeros((b, nh, hd, hd), jnp.float32))
+    xs = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          w.transpose(1, 0, 2, 3))
+    final_S, ys = jax.lax.scan(step, init, xs)
+    y = ys.transpose(1, 0, 2, 3)                                # (B,S,nh,hd)
+    y = rms_norm(y, p["ln_x"]).reshape(b, s, d).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    return out, {"shift": new_shift, "wkv": final_S}
+
+
+def rwkv6_timemix_chunked(p, cfg, x, state: dict | None = None,
+                          chunk: int = 32):
+    """Chunked-parallel RWKV-6 time-mix (identical operator to
+    rwkv6_timemix, scan depth S -> S/chunk).
+
+    Within a chunk the recurrence unrolls to a decay-weighted attention:
+        y_t = r_t S_{t-1} + (r_t ⊙ u ⊙ k_t)·v_t
+        A[t,i] = Σ_c r_tc k_ic exp(cum_{t-1,c} - cum_{i,c})   (i < t)
+    The pairwise exponent is a partial sum of log-decays, hence always <= 0
+    — numerically safe without rescaling tricks. Inter-chunk state carries
+    exactly as in the sequential form."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    if state is not None:
+        prev = jnp.concatenate([state["shift"][:, None], x[:, :-1]], axis=1)
+    else:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    new_shift = x[:, -1]
+    dx = prev - x
+    xr = x + dx * (p["mu_r"] + _lora(x, p["lr_A"], p["lr_B"]))
+    xk = x + dx * (p["mu_k"] + _lora(x, p["lk_A"], p["lk_B"]))
+    xv = x + dx * (p["mu_v"] + _lora(x, p["lv_A"], p["lv_B"]))
+    xw = x + dx * (p["mu_w"] + _lora(x, p["lw_A"], p["lw_B"]))
+    xg = x + dx * (p["mu_g"] + _lora(x, p["lg_A"], p["lg_B"]))
+    r = (xr @ p["wr"]).reshape(b, s, nh, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, s, nh, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, s, nh, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    lw = -jnp.exp((p["w0"] + _lora(xw, p["ww_A"], p["ww_B"])
+                   ).astype(jnp.float32)).reshape(b, s, nh, hd)  # log w_t <= 0
+    u = p["u"].reshape(nh, hd).astype(jnp.float32)
+
+    pad = (-s) % chunk
+    if pad:
+        r, k, v, lw = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                       for a in (r, k, v, lw))
+    nc = r.shape[1] // chunk
+    resh = lambda a: a.reshape(b, nc, chunk, nh, hd)
+    rc, kc, vc, lwc = map(resh, (r, k, v, lw))
+    cum = jnp.cumsum(lwc, axis=2)                       # inclusive log P_t
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict i < t
+
+    def chunk_body(S_prev, xs):
+        r_c, k_c, v_c, cum_c, lw_c = xs                 # (B,L,nh,hd) each
+        # pairwise decay exp(cum_{t-1} - cum_i) = exp(cum_t - lw_t - cum_i)
+        ct = (cum_c - lw_c).transpose(0, 2, 1, 3)       # (B,nh,L,hd) = cum_{t-1}
+        ci = cum_c.transpose(0, 2, 1, 3)                # (B,nh,L,hd) = cum_i
+        ed = jnp.exp(jnp.clip(ct[:, :, :, None, :] - ci[:, :, None, :, :],
+                              -60.0, 0.0))              # (B,nh,t,i,hd) <= 1
+        rt = r_c.transpose(0, 2, 1, 3)
+        kt = k_c.transpose(0, 2, 1, 3)
+        vt = v_c.transpose(0, 2, 1, 3)
+        A = jnp.einsum("bhtc,bhic,bhtic->bhti", rt, kt, ed)
+        A = A * tri[None, None]
+        y = jnp.einsum("bhti,bhiv->bhtv", A, vt)
+        # diagonal (bonus) term: (r_t ⊙ u ⊙ k_t) · v_t
+        diag = jnp.einsum("bhtc,hc,bhtc->bht", rt, u, kt)
+        y = y + diag[..., None] * vt
+        # inter-chunk: r_t ⊙ P_{t-1} applied to the carried state
+        y = y + jnp.einsum("bhtc,bhcv->bhtv", rt * jnp.exp(ct), S_prev)
+        # state update: S = diag(P_L) S_prev + Σ_i diag(P_L/P_i) k_i v_i^T
+        wL = jnp.exp(jnp.clip(ci[:, :, -1:, :] - ci, -60.0, 0.0))  # (B,nh,L,hd)
+        S_in = jnp.einsum("bhic,bhiv->bhcv", kt * wL, vt)
+        S_new = S_prev * jnp.exp(ci[:, :, -1])[..., :, None] + S_in
+        return S_new, y.transpose(0, 2, 1, 3)           # (B,L,nh,hd)
+
+    init = (state["wkv"] if state is not None
+            else jnp.zeros((b, nh, hd, hd), jnp.float32))
+    xs = tuple(a.transpose(1, 0, 2, 3, 4) for a in (rc, kc, vc, cum, lwc))
+    final_S, ys = jax.lax.scan(chunk_body, init, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, nh, hd)[:, :s]
+    y = rms_norm(y, p["ln_x"]).reshape(b, s, d).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    return out, {"shift": new_shift, "wkv": final_S}
+
+
+def rwkv6_channelmix(p, x, state: dict | None = None):
+    """state: {"shift": (B, d)}."""
+    if state is not None:
+        prev = jnp.concatenate([state["shift"][:, None], x[:, :-1]], axis=1)
+    else:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    new_shift = x[:, -1]
+    dx = prev - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out, {"shift": new_shift}

@@ -1,0 +1,434 @@
+"""Architecture zoo: parameter templates and forward passes.
+
+Covers the six assigned families:
+  dense   — llama-style GQA (yi, qwen3, starcoder2, gemma3 local:global)
+  moe     — token-choice top-k MoE (dbrx; arctic adds a dense residual MLP)
+  ssm     — RWKV-6 (attention-free)
+  hybrid  — zamba2: Mamba2 backbone + one *shared* attention block applied
+            every `attn_every` layers (weights reused, input = [h ; embed0])
+  encdec  — seamless: bidirectional encoder over frontend embeddings +
+            causal decoder with cross-attention
+  vlm     — pixtral: dense decoder consuming [patch embeds ; token embeds]
+            (frontend stubbed per the brief)
+
+All full-sequence forwards scan over STACKED layer params (HLO ~O(1) in
+depth). Serving caches are stacked on the same leading layer axis and are
+threaded through the scan as xs/ys.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as Lyr
+from repro.models.base import ModelConfig, ParamTemplate as P, stack_tree
+
+BIG_WINDOW = 1 << 30     # "no window" sentinel (window is a traced per-layer int)
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+def _attn_templates(cfg: ModelConfig, d_in: int | None = None) -> dict:
+    d = d_in or cfg.d_model
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    t = {
+        "wq": P((d, h * hd), ("embed", "qout")),
+        "wk": P((d, hkv * hd), ("embed", "kvout")),
+        "wv": P((d, hkv * hd), ("embed", "kvout")),
+        "wo": P((h * hd, cfg.d_model), ("qout", "embed")),
+    }
+    if cfg.qk_norm:
+        t["q_norm"] = P((hd,), (None,), "zeros")
+        t["k_norm"] = P((hd,), (None,), "zeros")
+    return t
+
+
+def _mlp_templates(cfg: ModelConfig, d_in: int | None = None,
+                   d_ff: int | None = None) -> dict:
+    d = d_in or cfg.d_model
+    ff = d_ff or cfg.d_ff
+    if cfg.mlp_act == "swiglu":
+        return {"wg": P((d, ff), ("embed", "ff")),
+                "wi": P((d, ff), ("embed", "ff")),
+                "wo": P((ff, cfg.d_model), ("ff", "embed"))}
+    return {"wi": P((d, ff), ("embed", "ff")),
+            "wo": P((ff, cfg.d_model), ("ff", "embed"))}
+
+
+def _moe_templates(cfg: ModelConfig) -> dict:
+    d, e = cfg.d_model, cfg.n_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    t = {
+        "router": P((d, e), ("embed", None)),
+        "w_gate": P((e, d, ff), ("experts", "embed", "ff")),
+        "w_in": P((e, d, ff), ("experts", "embed", "ff")),
+        "w_out": P((e, ff, d), ("experts", "ff", "embed")),
+    }
+    return t
+
+
+def _mamba_templates(cfg: ModelConfig) -> dict:
+    d, di, n = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    conv_ch = di + 2 * n
+    return {
+        "in_proj": P((d, 2 * di + 2 * n + nh), ("embed", "ff")),
+        "conv_w": P((cfg.ssm_conv, conv_ch), (None, "ff")),
+        "conv_b": P((conv_ch,), ("ff",), "zeros"),
+        "dt_bias": P((nh,), (None,), "zeros"),
+        "A_log": P((nh,), (None,), "ones"),
+        "D": P((nh,), (None,), "ones"),
+        "out_norm": P((di,), ("ff",), "zeros"),
+        "out_proj": P((di, d), ("ff", "embed")),
+    }
+
+
+def _rwkv_block_templates(cfg: ModelConfig) -> dict:
+    d, r = cfg.d_model, cfg.rwkv_lora_dim
+    nh = d // cfg.rwkv_head_dim
+    lora = lambda: {"A": P((d, r), ("embed", None)), "B": P((r, d), (None, "embed"), "zeros")}
+    tm = {
+        "wr": P((d, d), ("embed", "qout")),
+        "wk": P((d, d), ("embed", "qout")),
+        "wv": P((d, d), ("embed", "qout")),
+        "wg": P((d, d), ("embed", "qout")),
+        "wo": P((d, d), ("qout", "embed")),
+        "w0": P((d,), (None,), "zeros"),
+        "u": P((d,), (None,), "zeros"),
+        "ln_x": P((cfg.rwkv_head_dim,), (None,), "zeros"),
+    }
+    for nm in ["r", "k", "v", "w", "g"]:
+        tm[f"mu_{nm}"] = P((d,), (None,), "zeros")
+    for nm, pre in [("lr", "r"), ("lk", "k"), ("lv", "v"), ("lw", "w"), ("lg", "g")]:
+        l = lora()
+        tm[f"{nm}_A"], tm[f"{nm}_B"] = l["A"], l["B"]
+    tm["ww_A"] = P((d, r), ("embed", None))
+    tm["ww_B"] = P((r, d), (None, "embed"), "zeros")
+    cm = {
+        "mu_k": P((d,), (None,), "zeros"),
+        "mu_r": P((d,), (None,), "zeros"),
+        "wk": P((d, cfg.d_ff), ("embed", "ff")),
+        "wv": P((cfg.d_ff, d), ("ff", "embed")),
+        "wr": P((d, d), ("embed", "qout")),
+    }
+    return {"ln1": P((d,), (None,), "zeros"), "tm": tm,
+            "ln2": P((d,), (None,), "zeros"), "cm": cm}
+
+
+def _dense_block_templates(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": P((d,), (None,), "zeros"),
+        "attn": _attn_templates(cfg),
+        "ln2": P((d,), (None,), "zeros"),
+        "mlp": _mlp_templates(cfg),
+    }
+
+
+def _moe_block_templates(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    t = {
+        "ln1": P((d,), (None,), "zeros"),
+        "attn": _attn_templates(cfg),
+        "ln2": P((d,), (None,), "zeros"),
+        "moe": _moe_templates(cfg),
+    }
+    if cfg.dense_residual:
+        t["dense_mlp"] = _mlp_templates(cfg)
+    return t
+
+
+def _mamba_block_templates(cfg: ModelConfig) -> dict:
+    return {"ln": P((cfg.d_model,), (None,), "zeros"),
+            "mixer": _mamba_templates(cfg)}
+
+
+def _shared_attn_templates(cfg: ModelConfig) -> dict:
+    """zamba2 shared block: input [h ; embed0] (2d) -> proj -> attn+mlp."""
+    d = cfg.d_model
+    return {
+        "proj_in": P((2 * d, d), ("embed", None)),
+        "ln1": P((d,), (None,), "zeros"),
+        "attn": _attn_templates(cfg),
+        "ln2": P((d,), (None,), "zeros"),
+        "mlp": _mlp_templates(cfg),
+    }
+
+
+def templates(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    t: dict[str, Any] = {
+        "embed": P((cfg.vocab, d), ("vocab", "embed"), "normal", 0.02),
+        "final_norm": P((d,), (None,), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        t["head"] = P((d, cfg.vocab), ("embed", "vocab"))
+    if cfg.arch_type == "dense":
+        t["blocks"] = stack_tree(_dense_block_templates(cfg), cfg.n_layers)
+    elif cfg.arch_type == "moe":
+        t["blocks"] = stack_tree(_moe_block_templates(cfg), cfg.n_layers)
+    elif cfg.arch_type == "ssm":
+        t["blocks"] = stack_tree(_rwkv_block_templates(cfg), cfg.n_layers)
+    elif cfg.arch_type == "hybrid":
+        t["blocks"] = stack_tree(_mamba_block_templates(cfg), cfg.n_layers)
+        t["shared_attn"] = _shared_attn_templates(cfg)
+    elif cfg.arch_type == "encdec":
+        t["enc_blocks"] = stack_tree(_dense_block_templates(cfg),
+                                     cfg.n_enc_layers)
+        t["enc_norm"] = P((d,), (None,), "zeros")
+        dec = _dense_block_templates(cfg)
+        dec["ln_cross"] = P((d,), (None,), "zeros")
+        dec["cross"] = _attn_templates(cfg)
+        t["blocks"] = stack_tree(dec, cfg.n_layers)
+    else:
+        raise ValueError(cfg.arch_type)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Per-layer window schedule (gemma3 5:1 local:global)
+# ---------------------------------------------------------------------------
+
+def window_schedule(cfg: ModelConfig, n_layers: int | None = None) -> np.ndarray:
+    n = n_layers or cfg.n_layers
+    if not cfg.sliding_window:
+        return np.full(n, BIG_WINDOW, np.int32)
+    win = np.full(n, cfg.sliding_window, np.int32)
+    if cfg.global_every:
+        for i in range(n):
+            if cfg.is_global_layer(i):
+                win[i] = BIG_WINDOW
+    return win
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (full sequence; training / prefill-as-scan)
+# ---------------------------------------------------------------------------
+
+def _dense_block_fwd(p, cfg, x, positions, window, kv_cache=None,
+                     cache_len=None, mode="decode"):
+    h, cache = Lyr.attention(p["attn"], cfg, Lyr.rms_norm(x, p["ln1"]),
+                             positions=positions, window=window,
+                             kv_cache=kv_cache, cache_len=cache_len, mode=mode)
+    x = x + h
+    x = x + Lyr.mlp(Lyr.rms_norm(x, p["ln2"]), p["mlp"], cfg.mlp_act)
+    return x, cache
+
+
+def _moe_block_fwd(p, cfg, x, positions, window, kv_cache=None,
+                   cache_len=None, mode="decode"):
+    h, cache = Lyr.attention(p["attn"], cfg, Lyr.rms_norm(x, p["ln1"]),
+                             positions=positions, window=window,
+                             kv_cache=kv_cache, cache_len=cache_len, mode=mode)
+    x = x + h
+    xn = Lyr.rms_norm(x, p["ln2"])
+    if (getattr(cfg, "attn_shard", "auto") == "shmap" and Lyr.MESH is not None
+            and cfg.n_experts % Lyr.MESH.shape["model"] == 0):
+        moe_out, aux = Lyr.moe_ffn_shmap(p["moe"], cfg, xn)
+    else:
+        moe_out, aux = Lyr.moe_ffn(p["moe"], cfg, xn)
+    if cfg.dense_residual:
+        moe_out = moe_out + Lyr.mlp(xn, p["dense_mlp"], cfg.mlp_act)
+    return x + moe_out, cache, aux
+
+
+def _rwkv_block_fwd(p, cfg, x, state=None):
+    st_tm = None if state is None else {"shift": state["tm_shift"],
+                                        "wkv": state["wkv"]}
+    tm = (Lyr.rwkv6_timemix_chunked
+          if getattr(cfg, "ssm_impl", "scan") == "chunked" and x.shape[1] > 1
+          else Lyr.rwkv6_timemix)
+    h, new_tm = tm(p["tm"], cfg, Lyr.rms_norm(x, p["ln1"]), st_tm)
+    x = x + h
+    st_cm = None if state is None else {"shift": state["cm_shift"]}
+    h, new_cm = Lyr.rwkv6_channelmix(p["cm"], Lyr.rms_norm(x, p["ln2"]), st_cm)
+    x = x + h
+    new_state = {"tm_shift": new_tm["shift"], "wkv": new_tm["wkv"],
+                 "cm_shift": new_cm["shift"]}
+    return x, new_state
+
+
+def _mamba_block_fwd(p, cfg, x, state=None):
+    impl = (Lyr.mamba2_chunked
+            if getattr(cfg, "ssm_impl", "scan") == "chunked" and x.shape[1] > 1
+            else Lyr.mamba2_scan)
+    h, new_state = impl(p["mixer"], cfg, Lyr.rms_norm(x, p["ln"]), state)
+    return x + h, new_state
+
+
+def _shared_attn_fwd(p, cfg, x, emb0, positions, kv_cache=None,
+                     cache_len=None, mode="decode"):
+    inp = jnp.concatenate([x, emb0], axis=-1) @ p["proj_in"]
+    h, cache = Lyr.attention(p["attn"], cfg, Lyr.rms_norm(inp, p["ln1"]),
+                             positions=positions, window=BIG_WINDOW,
+                             kv_cache=kv_cache, cache_len=cache_len, mode=mode)
+    x = x + h
+    x = x + Lyr.mlp(Lyr.rms_norm(x, p["ln2"]), p["mlp"], cfg.mlp_act)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training). Returns logits.
+# batch: {"tokens": (B,S)} (+ "frontend": (B,P,d) for vlm/audio-encdec)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg, batch):
+    tok_emb = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.frontend_positions and cfg.arch_type != "encdec":
+        fe = batch["frontend"].astype(tok_emb.dtype)     # (B, P, d) stub embeds
+        return jnp.concatenate([fe, tok_emb], axis=1)
+    return tok_emb
+
+
+def forward(params, cfg: ModelConfig, batch) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits, moe_aux_loss)."""
+    if cfg.arch_type == "encdec":
+        return _forward_encdec(params, cfg, batch)
+    x = embed_inputs(params, cfg, batch)
+    b, s, d = x.shape
+    positions = jnp.arange(s)[None, :].repeat(b, 0)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    # Activation checkpointing: reverse-mode through a scanned stack would
+    # otherwise save every layer's intermediates (TBs at train_4k scale);
+    # remat the block body so the backward pass recomputes it from the
+    # (B,S,d) residual carry — the production policy for deep stacks.
+    ckpt = jax.checkpoint
+
+    if cfg.arch_type == "dense":
+        wins = jnp.asarray(window_schedule(cfg))
+
+        @ckpt
+        def body(x, xs):
+            p, w = xs
+            x, _ = _dense_block_fwd(p, cfg, x, positions, w)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, (params["blocks"], wins))
+
+    elif cfg.arch_type == "moe":
+        @ckpt
+        def body(carry, p):
+            x, aux = carry
+            x, _, a = _moe_block_fwd(p, cfg, x, positions, BIG_WINDOW)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["blocks"])
+
+    elif cfg.arch_type == "ssm":
+        @ckpt
+        def body(x, p):
+            x, _ = _rwkv_block_fwd(p, cfg, x)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+
+    elif cfg.arch_type == "hybrid":
+        x = _hybrid_forward(params, cfg, x, positions)
+
+    x = Lyr.rms_norm(x, params["final_norm"])
+    logits = _lm_head(params, cfg, x)
+    return logits, aux_total
+
+
+def _lm_head(params, cfg, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return x @ w.astype(x.dtype)
+
+
+def _hybrid_forward(params, cfg, x, positions):
+    """zamba2: groups of `attn_every` mamba layers + shared attn, then tail."""
+    emb0 = x
+    g = cfg.attn_every
+    n_groups, tail = divmod(cfg.n_layers, g)
+    main = jax.tree_util.tree_map(
+        lambda a: a[:n_groups * g].reshape((n_groups, g) + a.shape[1:]),
+        params["blocks"])
+    tail_p = jax.tree_util.tree_map(lambda a: a[n_groups * g:], params["blocks"])
+
+    @jax.checkpoint
+    def group_body(x, p_group):
+        def inner(x, p):
+            x, _ = _mamba_block_fwd(p, cfg, x)
+            return x, None
+        x, _ = jax.lax.scan(inner, x, p_group)
+        x, _ = _shared_attn_fwd(params["shared_attn"], cfg, x, emb0, positions)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, main)
+    if tail:
+        @jax.checkpoint
+        def inner(x, p):
+            x, _ = _mamba_block_fwd(p, cfg, x)
+            return x, None
+        x, _ = jax.lax.scan(inner, x, tail_p)
+    return x
+
+
+def _forward_encdec(params, cfg, batch):
+    enc_x = batch["frontend"].astype(cfg.dtype)          # (B, S_enc, d) stub
+    b, s_enc, d = enc_x.shape
+    enc_pos = jnp.arange(s_enc)[None, :].repeat(b, 0)
+
+    @jax.checkpoint
+    def enc_body(x, p):
+        h, _ = Lyr.attention(p["attn"], cfg, Lyr.rms_norm(x, p["ln1"]),
+                             positions=enc_pos, causal=False)
+        x = x + h
+        x = x + Lyr.mlp(Lyr.rms_norm(x, p["ln2"]), p["mlp"], cfg.mlp_act)
+        return x, None
+
+    enc_out, _ = jax.lax.scan(enc_body, enc_x, params["enc_blocks"])
+    enc_out = Lyr.rms_norm(enc_out, params["enc_norm"])
+
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    s_dec = x.shape[1]
+    positions = jnp.arange(s_dec)[None, :].repeat(b, 0)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    @jax.checkpoint
+    def dec_body(x, p):
+        x, _ = _dense_block_fwd(p, cfg, x, positions, BIG_WINDOW)
+        ck = (enc_out @ p["cross"]["wk"]).reshape(b, s_enc, hkv, hd)
+        cv = (enc_out @ p["cross"]["wv"]).reshape(b, s_enc, hkv, hd)
+        h, _ = Lyr.attention(p["cross"], cfg, Lyr.rms_norm(x, p["ln_cross"]),
+                             positions=positions, causal=False,
+                             cross_kv=(ck, cv))
+        return x + h, None
+
+    x, _ = jax.lax.scan(dec_body, x, params["blocks"])
+    x = Lyr.rms_norm(x, params["final_norm"])
+    return _lm_head(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Loss / train step
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, cfg: ModelConfig, batch, aux_weight: float = 0.01):
+    logits, aux = forward(params, cfg, batch)
+    targets = batch["targets"]
+    # vlm: frontend positions carry no target; score text positions only
+    if cfg.frontend_positions and cfg.arch_type != "encdec":
+        logits = logits[:, cfg.frontend_positions:]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll + aux_weight * aux
+
+
+def train_step(params, opt_state, batch, cfg: ModelConfig, opt_update):
+    loss, grads = jax.value_and_grad(lm_loss)(params, cfg, batch)
+    updates, opt_state = opt_update(grads, opt_state, params)
+    params = jax.tree_util.tree_map(lambda p_, u: p_ + u.astype(p_.dtype),
+                                    params, updates)
+    return params, opt_state, loss

@@ -1,0 +1,4 @@
+from repro.optim.sgd import sgd, momentum_sgd
+from repro.optim.adam import adam
+
+__all__ = ["sgd", "momentum_sgd", "adam"]

@@ -1,0 +1,40 @@
+"""Adam (for the neural-ranker training path; the CLOES cascade itself uses
+plain SGD per the paper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.sgd import OptPair
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> OptPair:
+    def init(params):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"step": jnp.zeros((), jnp.int32), "m": z,
+                "v": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                                   state["m"], grads)
+        v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                                   state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = -lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p
+            return u
+
+        if params is None:
+            params = jax.tree_util.tree_map(jnp.zeros_like, m)
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return OptPair(init, update)

@@ -1,0 +1,68 @@
+"""Minimal optax-style optimizers, built from scratch (optax not available).
+
+Each factory returns (init_fn, update_fn) where
+    state = init_fn(params)
+    updates, state = update_fn(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptPair(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array]) -> OptPair:
+    """Plain SGD — the paper's optimizer ('the Stochastic Gradient Descent
+    algorithm is utilized because of its simplicity, speed, and stability')."""
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        lr_t = lr(step) if callable(lr) else lr
+        updates = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return updates, {"step": step + 1}
+
+    return OptPair(init, update)
+
+
+def momentum_sgd(lr: float | Callable, momentum: float = 0.9) -> OptPair:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        lr_t = lr(step) if callable(lr) else lr
+        mu = jax.tree_util.tree_map(lambda m, g: momentum * m + g,
+                                    state["mu"], grads)
+        updates = jax.tree_util.tree_map(lambda m: -lr_t * m, mu)
+        return updates, {"step": step + 1, "mu": mu}
+
+    return OptPair(init, update)
+
+
+def cosine_schedule(base_lr: float, total_steps: int,
+                    warmup: int = 0, min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return lr

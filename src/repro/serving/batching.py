@@ -1,0 +1,85 @@
+"""Request batching for the cascade ranking server.
+
+The operational system serves ~40k QPS across clusters (paper §4.1); the
+unit of work is a *query group*: (query features, recalled item features,
+M_q). The batcher pads item lists to a fixed group size and packs groups
+into fixed-batch buckets so the jitted scoring functions see a small, warm
+set of shapes (shape-bucketing — the standard trick to avoid recompiles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RankRequest:
+    request_id: int
+    q_feat: np.ndarray          # (d_q,)
+    item_feats: np.ndarray      # (n_items, d_x)
+    m_q: int                    # recalled-item count in the full index
+    price: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class RankResponse:
+    request_id: int
+    order: np.ndarray           # ranked item indices (best first)
+    scores: np.ndarray          # final-stage scores, -inf for filtered
+    survivors: np.ndarray       # bool mask of items that passed all stages
+    est_latency_ms: float       # Eq-16 latency model for this query
+    stage_counts: list[int]
+
+
+class RequestBatcher:
+    """Pads and packs requests into (B, G) buckets."""
+
+    def __init__(self, group_size: int = 64, batch_groups: int = 32,
+                 group_buckets: tuple[int, ...] = (16, 64, 256)):
+        self.group_size = group_size
+        self.batch_groups = batch_groups
+        self.buckets = sorted(group_buckets)
+        self._queue: list[RankRequest] = []
+
+    def submit(self, req: RankRequest) -> None:
+        self._queue.append(req)
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def _bucket(self, n_items: int) -> int:
+        for b in self.buckets:
+            if n_items <= b:
+                return b
+        return self.buckets[-1]
+
+    def drain(self) -> Iterator[tuple[list[RankRequest], dict]]:
+        """Yield (requests, padded batch arrays) until the queue is empty.
+        Items beyond the largest bucket are truncated (and noted)."""
+        by_bucket: dict[int, list[RankRequest]] = {}
+        for r in self._queue:
+            by_bucket.setdefault(self._bucket(len(r.item_feats)), []).append(r)
+        self._queue.clear()
+        for g, reqs in sorted(by_bucket.items()):
+            for s in range(0, len(reqs), self.batch_groups):
+                chunk = reqs[s:s + self.batch_groups]
+                yield chunk, self._pad(chunk, g)
+
+    def _pad(self, reqs: list[RankRequest], g: int) -> dict:
+        b = len(reqs)
+        d_x = reqs[0].item_feats.shape[-1]
+        d_q = reqs[0].q_feat.shape[-1]
+        x = np.zeros((b, g, d_x), np.float32)
+        q = np.zeros((b, d_q), np.float32)
+        mask = np.zeros((b, g), np.float32)
+        m_q = np.zeros((b,), np.float32)
+        for i, r in enumerate(reqs):
+            n = min(len(r.item_feats), g)
+            x[i, :n] = r.item_feats[:n]
+            q[i] = r.q_feat
+            mask[i, :n] = 1.0
+            m_q[i] = r.m_q
+        return {"x": x, "q": q, "mask": mask, "m_q": m_q}

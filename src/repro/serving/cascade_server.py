@@ -1,0 +1,182 @@
+"""The CLOES cascade as a serving pipeline (the paper's deployed system).
+
+Stages 1..T are the jointly-trained linear classifiers, executed by the
+fused Pallas scorer in one pass over the candidate matrix; per-stage
+survivor counts come from the Eq-10 expected-count thresholds learned at
+training time. An optional NEURAL FINAL STAGE — any of the 10 assigned
+architectures with a scalar value head — re-scores only the items that
+survive the linear cascade, exactly how the paper treats the expensive
+"Deep & Wide" feature (Table 1, cost 0.84): a costly scorer that the
+cascade shields from the bulk of the traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cascade as C
+from repro.core import losses as L
+from repro.kernels import ops as K
+from repro.models import base as MB
+from repro.models import zoo as Z
+from repro.serving.batching import RankRequest, RankResponse, RequestBatcher
+
+
+# ---------------------------------------------------------------------------
+# Neural final stage: zoo model + mean-pool value head over item "token"
+# encodings. Item features are quantized into the model's vocab — a stand-in
+# tokenizer (the real system embeds item text/ids; the *compute* is real).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class NeuralScorer:
+    cfg: MB.ModelConfig
+    params: dict
+    head: jax.Array              # (d_model,)
+    tokens_per_item: int = 8
+
+    @classmethod
+    def create(cls, cfg: MB.ModelConfig, key: jax.Array,
+               tokens_per_item: int = 8) -> "NeuralScorer":
+        kp, kh = jax.random.split(key)
+        params = MB.materialize(Z.templates(cfg), kp, dtype=jnp.float32)
+        # small head: an untrained final stage should perturb, not
+        # dominate, the calibrated cascade score
+        head = 0.002 * jax.random.normal(kh, (cfg.d_model,))
+        return cls(cfg=cfg, params=params, head=head,
+                   tokens_per_item=tokens_per_item)
+
+    def tokenize(self, feats: jax.Array) -> jax.Array:
+        """(N, d_x) -> (N, tokens_per_item) int32 by feature quantization."""
+        n, d = feats.shape
+        t = self.tokens_per_item
+        take = feats[:, :t] if d >= t else jnp.pad(feats, ((0, 0), (0, t - d)))
+        quant = jnp.clip(((take + 4.0) / 8.0 * (self.cfg.vocab - 1)), 0,
+                         self.cfg.vocab - 1)
+        return quant.astype(jnp.int32)
+
+    def score(self, feats: jax.Array) -> jax.Array:
+        """(N, d_x) -> (N,) scalar relevance scores: mean-pooled final
+        hidden state through the value head."""
+        tokens = self.tokenize(feats)
+        hidden = self._hidden(tokens)
+        return hidden.mean(axis=1) @ self.head
+
+    def _hidden(self, tokens: jax.Array) -> jax.Array:
+        params = self.params
+        x = jnp.take(params["embed"], tokens, axis=0)
+        b, s, _ = x.shape
+        positions = jnp.arange(s)[None, :].repeat(b, 0)
+        from repro.models import layers as Lyr
+        wins = jnp.asarray(Z.window_schedule(self.cfg))
+
+        def body(x, xs):
+            p, w = xs
+            x, _ = Z._dense_block_fwd(p, self.cfg, x, positions, w)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, (params["blocks"], wins))
+        return Lyr.rms_norm(x, params["final_norm"])
+
+
+# ---------------------------------------------------------------------------
+# The cascade server.
+# ---------------------------------------------------------------------------
+
+class CascadeServer:
+    def __init__(self, params: C.Params, cfg: C.CascadeConfig,
+                 lcfg: L.LossConfig | None = None,
+                 neural_stage: NeuralScorer | None = None,
+                 neural_cost: float = 0.84,
+                 use_fused_kernel: bool = True):
+        self.params = jax.tree_util.tree_map(jnp.asarray, params)
+        self.cfg = cfg
+        self.lcfg = lcfg or L.LossConfig()
+        self.neural = neural_stage
+        self.neural_cost = neural_cost
+        self.use_fused_kernel = use_fused_kernel
+        self.batcher = RequestBatcher()
+
+    # -- scoring ---------------------------------------------------------
+
+    def _stage_scores(self, x: jax.Array, q: jax.Array) -> jax.Array:
+        """(B, G, d_x), (B, d_q) -> (B, G, T) cumulative log pass-probs."""
+        if self.use_fused_kernel:
+            masks = jnp.asarray(self.cfg.masks, jnp.float32)
+            w_eff = self.params["w_x"] * masks                # (T, d)
+            zq = q @ self.params["w_q"].T + self.params["b"]  # (B, T)
+            fn = jax.vmap(lambda xb, zqb: K.cascade_score(xb, w_eff, zqb))
+            return fn(x, zq)
+        return C.log_pass_probs(self.params, self.cfg, x, q)
+
+    def rank_batch(self, batch: dict) -> dict:
+        """Run the hard cascade on a padded batch; returns arrays."""
+        x = jnp.asarray(batch["x"], jnp.float32)
+        q = jnp.asarray(batch["q"], jnp.float32)
+        mask = jnp.asarray(batch["mask"], jnp.float32)
+        m_q = jnp.asarray(batch["m_q"], jnp.float32)
+        B, G, _ = x.shape
+        lp = self._stage_scores(x, q)                          # (B, G, T)
+        counts = C.expected_counts_per_query(
+            self.params, self.cfg, x, q, mask, m_q)            # (B, T)
+        n_keep = jnp.clip(jnp.ceil(counts * mask.sum(-1, keepdims=True)
+                                   / jnp.maximum(m_q[:, None], 1.0)), 1, G)
+        surv = mask
+        stage_surv = []
+        for j in range(self.cfg.n_stages):
+            s = jnp.where(surv > 0, lp[..., j], -jnp.inf)
+            rank = jnp.argsort(jnp.argsort(-s, axis=-1), axis=-1)
+            surv = surv * (rank < n_keep[:, j:j + 1]).astype(mask.dtype)
+            stage_surv.append(surv)
+        final_scores = jnp.where(surv > 0, lp[..., -1], -jnp.inf)
+
+        if self.neural is not None:
+            # expensive stage: score only survivors (flattened, padded)
+            flat = x.reshape(B * G, -1)
+            nscore = self.neural.score(flat).reshape(B, G)
+            final_scores = jnp.where(surv > 0,
+                                     final_scores + nscore.astype(jnp.float32),
+                                     -jnp.inf)
+
+        lat = L.expected_latency_per_query(
+            self.params, self.cfg, self.lcfg, x, q, mask, m_q)
+        if self.neural is not None:
+            lat = lat + (self.lcfg.latency_scale * self.neural_cost
+                         * surv.sum(-1) / jnp.maximum(mask.sum(-1), 1)
+                         * jnp.minimum(m_q, 6000.0))
+        return {
+            "scores": final_scores,
+            "survivors": surv,
+            "stage_survivors": jnp.stack(stage_surv, -1),
+            "est_latency_ms": lat,
+        }
+
+    # -- request API ------------------------------------------------------
+
+    def submit(self, req: RankRequest) -> None:
+        self.batcher.submit(req)
+
+    def serve(self) -> list[RankResponse]:
+        out: list[RankResponse] = []
+        for reqs, batch in self.batcher.drain():
+            res = self.rank_batch(batch)
+            scores = np.asarray(res["scores"])
+            surv = np.asarray(res["survivors"])
+            lat = np.asarray(res["est_latency_ms"])
+            stage_counts = np.asarray(res["stage_survivors"].sum(axis=1))
+            for i, r in enumerate(reqs):
+                n = len(r.item_feats)
+                order = np.argsort(-scores[i][:n], kind="stable")
+                out.append(RankResponse(
+                    request_id=r.request_id,
+                    order=order,
+                    scores=scores[i][:n],
+                    survivors=surv[i][:n] > 0,
+                    est_latency_ms=float(lat[i]),
+                    stage_counts=[int(c) for c in stage_counts[i]],
+                ))
+        return out

@@ -1,0 +1,362 @@
+"""Serving engine: cache construction, prefill and single-token decode for
+every architecture family.
+
+Caches are pytrees with all per-layer state STACKED on a leading layer axis,
+threaded through jax.lax.scan together with the stacked params — HLO stays
+~O(1) in depth, and the cache pytree is a first-class jit argument (donated
+in the real serving loop).
+
+Shapes (M = max cache length):
+  dense/moe : {"k","v"}: (L, B, M, Hkv, hd)
+  ssm(rwkv) : {"tm_shift": (L,B,d), "wkv": (L,B,nh,hd,hd) f32, "cm_shift": (L,B,d)}
+  hybrid    : {"conv": (L,B,kw-1,di+2n), "ssm": (L,B,nh,hd,N) f32,
+               "attn_k","attn_v": (G,B,M,Hkv,hd)}  (G shared-attn applications)
+  encdec    : dense cache + {"cross_k","cross_v": (L,B,S_enc,Hkv,hd)}
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as Lyr
+from repro.models import zoo as Z
+from repro.models.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (shapes only / zeros)
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                 enc_len: int = 0) -> dict:
+    """ShapeDtypeStruct tree of the serving cache (used by the dry-run)."""
+    L, b, d = cfg.n_layers, batch, cfg.d_model
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    sd = lambda shape, dt=cfg.dtype: jax.ShapeDtypeStruct(shape, dt)
+    if cfg.arch_type == "dense" and cfg.sliding_window and cfg.global_every:
+        # gemma3-style: global layers keep the full cache; local layers keep
+        # only a window-sized ring buffer — the memory win that makes
+        # long_500k feasible for this family.
+        g = cfg.global_every
+        n_groups, tail = divmod(L, g)
+        w = min(cfg.sliding_window, max_len)
+        return {"gk": sd((n_groups, b, max_len, hkv, hd)),
+                "gv": sd((n_groups, b, max_len, hkv, hd)),
+                "lk": sd((n_groups, g - 1, b, w, hkv, hd)),
+                "lv": sd((n_groups, g - 1, b, w, hkv, hd)),
+                "tlk": sd((tail, b, w, hkv, hd)),
+                "tlv": sd((tail, b, w, hkv, hd))}
+    if cfg.arch_type in ("dense", "moe"):
+        return {"k": sd((L, b, max_len, hkv, hd)),
+                "v": sd((L, b, max_len, hkv, hd))}
+    if cfg.arch_type == "ssm":
+        nh = d // cfg.rwkv_head_dim
+        rhd = cfg.rwkv_head_dim
+        return {"tm_shift": sd((L, b, d)),
+                "wkv": sd((L, b, nh, rhd, rhd), jnp.float32),
+                "cm_shift": sd((L, b, d))}
+    if cfg.arch_type == "hybrid":
+        g = max(cfg.attn_every, 1)
+        n_groups = cfg.n_layers // g
+        di, n = cfg.ssm_d_inner, cfg.ssm_state
+        return {"conv": sd((L, b, cfg.ssm_conv - 1, di + 2 * n)),
+                "ssm": sd((L, b, cfg.ssm_heads, cfg.ssm_head_dim, n),
+                          jnp.float32),
+                "attn_k": sd((n_groups, b, max_len, hkv, hd)),
+                "attn_v": sd((n_groups, b, max_len, hkv, hd))}
+    if cfg.arch_type == "encdec":
+        return {"k": sd((L, b, max_len, hkv, hd)),
+                "v": sd((L, b, max_len, hkv, hd)),
+                "cross_k": sd((L, b, enc_len, hkv, hd)),
+                "cross_v": sd((L, b, enc_len, hkv, hd))}
+    raise ValueError(cfg.arch_type)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> dict:
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        cache_shapes(cfg, batch, max_len, enc_len))
+
+
+# ---------------------------------------------------------------------------
+# Prefill: consume the full prompt, fill the cache, return last-token logits.
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch, cache) -> tuple[jax.Array, dict]:
+    if cfg.arch_type == "encdec":
+        return _prefill_encdec(params, cfg, batch, cache)
+    x = Z.embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :].repeat(b, 0)
+
+    if cfg.arch_type == "dense" and cfg.sliding_window and cfg.global_every:
+        x, new_cache = _dense_serve_windowed(params, cfg, x, positions, cache,
+                                             cache_len=0, mode="prefill")
+    elif cfg.arch_type in ("dense", "moe"):
+        wins = jnp.asarray(Z.window_schedule(cfg))
+
+        def body(x, xs):
+            p, kc, vc, w = xs
+            if cfg.arch_type == "dense":
+                x, cache_new = Z._dense_block_fwd(
+                    p, cfg, x, positions, w, kv_cache={"k": kc, "v": vc},
+                    cache_len=0, mode="prefill")
+            else:
+                x, cache_new, _ = Z._moe_block_fwd(
+                    p, cfg, x, positions, w, kv_cache={"k": kc, "v": vc},
+                    cache_len=0, mode="prefill")
+            return x, (cache_new["k"], cache_new["v"])
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"], wins))
+        new_cache = {"k": ks, "v": vs}
+
+    elif cfg.arch_type == "ssm":
+        def body(x, xs):
+            p, st = xs
+            x, new_st = Z._rwkv_block_fwd(p, cfg, x, None)
+            return x, new_st
+
+        x, sts = jax.lax.scan(body, x, (params["blocks"], _rwkv_state_of(cache)))
+        new_cache = sts
+
+    elif cfg.arch_type == "hybrid":
+        x, new_cache = _hybrid_run(params, cfg, x, positions, cache,
+                                   cache_len=0, mode="prefill")
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = Lyr.rms_norm(x[:, -1:], params["final_norm"])
+    return Z._lm_head(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token against the populated cache.
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, tokens, cache,
+                cache_len) -> tuple[jax.Array, dict]:
+    """tokens: (B, 1) int32; cache_len: scalar int (current cache fill)."""
+    if cfg.arch_type == "encdec":
+        return _decode_encdec(params, cfg, tokens, cache, cache_len)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cache_len, jnp.int32)
+
+    if cfg.arch_type == "dense" and cfg.sliding_window and cfg.global_every:
+        x, new_cache = _dense_serve_windowed(params, cfg, x, positions, cache,
+                                             cache_len=cache_len, mode="decode")
+    elif cfg.arch_type in ("dense", "moe"):
+        wins = jnp.asarray(Z.window_schedule(cfg))
+
+        def body(x, xs):
+            p, kc, vc, w = xs
+            if cfg.arch_type == "dense":
+                x, cache_new = Z._dense_block_fwd(
+                    p, cfg, x, positions, w, kv_cache={"k": kc, "v": vc},
+                    cache_len=cache_len, mode="decode")
+            else:
+                x, cache_new, _ = Z._moe_block_fwd(
+                    p, cfg, x, positions, w, kv_cache={"k": kc, "v": vc},
+                    cache_len=cache_len, mode="decode")
+            return x, (cache_new["k"], cache_new["v"])
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"], wins))
+        new_cache = {"k": ks, "v": vs}
+
+    elif cfg.arch_type == "ssm":
+        def body(x, xs):
+            p, st = xs
+            x, new_st = Z._rwkv_block_fwd(p, cfg, x, st)
+            return x, new_st
+
+        x, sts = jax.lax.scan(body, x, (params["blocks"], _rwkv_state_of(cache)))
+        new_cache = sts
+
+    elif cfg.arch_type == "hybrid":
+        x, new_cache = _hybrid_run(params, cfg, x, positions, cache,
+                                   cache_len=cache_len, mode="decode")
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = Lyr.rms_norm(x, params["final_norm"])
+    return Z._lm_head(params, cfg, x), new_cache
+
+
+def _rwkv_state_of(cache):
+    return {"tm_shift": cache["tm_shift"], "wkv": cache["wkv"],
+            "cm_shift": cache["cm_shift"]}
+
+
+# ---------------------------------------------------------------------------
+# Dense with local:global pattern (gemma3): grouped scan — (g-1) ring-buffer
+# local layers + 1 full-cache global layer per group, local tail.
+# ---------------------------------------------------------------------------
+
+def _dense_serve_windowed(params, cfg, x, positions, cache, cache_len, mode):
+    g = cfg.global_every
+    n_groups, tail = divmod(cfg.n_layers, g)
+    w = cache["lk"].shape[3]
+    resh = lambda a: a[:n_groups * g].reshape((n_groups, g) + a.shape[1:])
+    grouped = jax.tree_util.tree_map(resh, params["blocks"])
+    local_p = jax.tree_util.tree_map(lambda a: a[:, :g - 1], grouped)
+    global_p = jax.tree_util.tree_map(lambda a: a[:, g - 1], grouped)
+    tail_p = jax.tree_util.tree_map(lambda a: a[n_groups * g:], params["blocks"])
+
+    def local_block(x, xs):
+        p, lk, lv = xs
+        h, ring = Lyr.attention(
+            p["attn"], cfg, Lyr.rms_norm(x, p["ln1"]), positions=positions,
+            kv_cache={"k": lk, "v": lv}, cache_len=cache_len, mode=mode,
+            ring_window=w)
+        x = x + h
+        x = x + Lyr.mlp(Lyr.rms_norm(x, p["ln2"]), p["mlp"], cfg.mlp_act)
+        return x, (ring["k"], ring["v"])
+
+    def group_body(x, xs):
+        p_loc, p_glob, lk, lv, gk, gv = xs
+        x, (lks, lvs) = jax.lax.scan(local_block, x, (p_loc, lk, lv))
+        x, gc = Z._dense_block_fwd(
+            p_glob, cfg, x, positions, Lyr.NO_WINDOW,
+            kv_cache={"k": gk, "v": gv}, cache_len=cache_len, mode=mode)
+        return x, (lks, lvs, gc["k"], gc["v"])
+
+    x, (lks, lvs, gks, gvs) = jax.lax.scan(
+        group_body, x, (local_p, global_p, cache["lk"], cache["lv"],
+                        cache["gk"], cache["gv"]))
+    if tail:
+        x, (tlks, tlvs) = jax.lax.scan(
+            local_block, x, (tail_p, cache["tlk"], cache["tlv"]))
+    else:
+        tlks, tlvs = cache["tlk"], cache["tlv"]
+    return x, {"gk": gks, "gv": gvs, "lk": lks, "lv": lvs,
+               "tlk": tlks, "tlv": tlvs}
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2): grouped scan with shared attention block + caches.
+# ---------------------------------------------------------------------------
+
+def _hybrid_run(params, cfg, x, positions, cache, cache_len, mode):
+    emb0 = x
+    g = cfg.attn_every
+    n_groups, tail = divmod(cfg.n_layers, g)
+    resh = lambda a: a[:n_groups * g].reshape((n_groups, g) + a.shape[1:])
+    main_p = jax.tree_util.tree_map(resh, params["blocks"])
+    tail_p = jax.tree_util.tree_map(lambda a: a[n_groups * g:], params["blocks"])
+    main_st = {"conv": resh(cache["conv"]), "ssm": resh(cache["ssm"])}
+    tail_st = {"conv": cache["conv"][n_groups * g:],
+               "ssm": cache["ssm"][n_groups * g:]}
+    use_state = mode == "decode"
+
+    def group_body(x, xs):
+        p_group, st_group, kc, vc = xs
+
+        def inner(x, xs2):
+            p, st = xs2
+            x, new_st = Z._mamba_block_fwd(p, cfg, x, st if use_state else None)
+            return x, new_st
+
+        x, new_sts = jax.lax.scan(inner, x, (p_group,
+                                             {"conv": st_group["conv"],
+                                              "ssm": st_group["ssm"]}))
+        x, attn_cache = Z._shared_attn_fwd(
+            params["shared_attn"], cfg, x, emb0, positions,
+            kv_cache={"k": kc, "v": vc}, cache_len=cache_len, mode=mode)
+        return x, (new_sts, attn_cache["k"], attn_cache["v"])
+
+    x, (new_main, ks, vs) = jax.lax.scan(
+        group_body, x, (main_p, main_st, cache["attn_k"], cache["attn_v"]))
+
+    if tail:
+        def inner(x, xs2):
+            p, st = xs2
+            x, new_st = Z._mamba_block_fwd(p, cfg, x, st if use_state else None)
+            return x, new_st
+
+        x, new_tail = jax.lax.scan(inner, x, (tail_p, tail_st))
+        conv = jnp.concatenate(
+            [new_main["conv"].reshape((-1,) + new_main["conv"].shape[2:]),
+             new_tail["conv"]], 0)
+        ssm = jnp.concatenate(
+            [new_main["ssm"].reshape((-1,) + new_main["ssm"].shape[2:]),
+             new_tail["ssm"]], 0)
+    else:
+        conv = new_main["conv"].reshape((-1,) + new_main["conv"].shape[2:])
+        ssm = new_main["ssm"].reshape((-1,) + new_main["ssm"].shape[2:])
+    return x, {"conv": conv, "ssm": ssm, "attn_k": ks, "attn_v": vs}
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (seamless): encoder runs once at prefill; its projected
+# cross K/V live in the cache for decode.
+# ---------------------------------------------------------------------------
+
+def _prefill_encdec(params, cfg, batch, cache):
+    enc_x = batch["frontend"].astype(cfg.dtype)
+    b, s_enc, _ = enc_x.shape
+    enc_pos = jnp.arange(s_enc)[None, :].repeat(b, 0)
+
+    def enc_body(x, p):
+        h, _ = Lyr.attention(p["attn"], cfg, Lyr.rms_norm(x, p["ln1"]),
+                             positions=enc_pos, causal=False)
+        x = x + h
+        x = x + Lyr.mlp(Lyr.rms_norm(x, p["ln2"]), p["mlp"], cfg.mlp_act)
+        return x, None
+
+    enc_out, _ = jax.lax.scan(enc_body, enc_x, params["enc_blocks"])
+    enc_out = Lyr.rms_norm(enc_out, params["enc_norm"])
+
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :].repeat(b, 0)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    def dec_body(x, xs):
+        p, kc, vc = xs
+        x, cache_new = Z._dense_block_fwd(
+            p, cfg, x, positions, Z.BIG_WINDOW,
+            kv_cache={"k": kc, "v": vc}, cache_len=0, mode="prefill")
+        ck = (enc_out @ p["cross"]["wk"]).reshape(b, s_enc, hkv, hd)
+        cv = (enc_out @ p["cross"]["wv"]).reshape(b, s_enc, hkv, hd)
+        h, _ = Lyr.attention(p["cross"], cfg, Lyr.rms_norm(x, p["ln_cross"]),
+                             positions=positions, causal=False,
+                             cross_kv=(ck, cv))
+        return x + h, (cache_new["k"], cache_new["v"],
+                       ck.astype(cfg.dtype), cv.astype(cfg.dtype))
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(
+        dec_body, x, (params["blocks"], cache["k"], cache["v"]))
+    x = Lyr.rms_norm(x[:, -1:], params["final_norm"])
+    return Z._lm_head(params, cfg, x), {"k": ks, "v": vs,
+                                        "cross_k": cks, "cross_v": cvs}
+
+
+def _decode_encdec(params, cfg, tokens, cache, cache_len):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cache_len, jnp.int32)
+
+    def dec_body(x, xs):
+        p, kc, vc, ck, cv = xs
+        x, cache_new = Z._dense_block_fwd(
+            p, cfg, x, positions, Z.BIG_WINDOW,
+            kv_cache={"k": kc, "v": vc}, cache_len=cache_len, mode="decode")
+        h, _ = Lyr.attention(p["cross"], cfg, Lyr.rms_norm(x, p["ln_cross"]),
+                             positions=positions, causal=False,
+                             cross_kv=(ck, cv))
+        return x + h, (cache_new["k"], cache_new["v"])
+
+    x, (ks, vs) = jax.lax.scan(
+        dec_body, x,
+        (params["blocks"], cache["k"], cache["v"],
+         cache["cross_k"], cache["cross_v"]))
+    x = Lyr.rms_norm(x, params["final_norm"])
+    return Z._lm_head(params, cfg, x), {"k": ks, "v": vs,
+                                        "cross_k": cache["cross_k"],
+                                        "cross_v": cache["cross_v"]}

@@ -1,0 +1,34 @@
+import os
+import sys
+
+# Smoke tests and benches must see ONE device — the 512-device flag is set
+# ONLY inside launch/dryrun.py (per the brief). Nothing to do here except
+# make sure a stray environment doesn't leak in.
+os.environ.pop("XLA_FLAGS", None) if "force_host_platform_device_count" in \
+    os.environ.get("XLA_FLAGS", "") else None
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as CFG
+from repro.data import generate_log, LogConfig
+
+
+@pytest.fixture(scope="session")
+def small_log():
+    return generate_log(LogConfig(n_queries=300, items_per_query=32, seed=11))
+
+
+@pytest.fixture(scope="session")
+def split_log(small_log):
+    return small_log.split(0.8, seed=0)
+
+
+def smoke_cfg(arch: str):
+    """Reduced config in float32 for CPU numerics."""
+    return dataclasses.replace(CFG.get_smoke(arch), dtype=jnp.float32)

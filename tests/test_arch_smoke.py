@@ -1,0 +1,175 @@
+"""Per-architecture smoke tests: reduced config (<=2 layers, d_model<=512,
+<=4 experts), one forward + one train step + serving consistency on CPU.
+Output shapes asserted, all values finite."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as CFG
+from repro.models import base as MB
+from repro.models import zoo as Z
+from repro.optim import adam
+from repro.serving import engine as E
+
+ARCHS = CFG.all_archs()
+
+
+def _batch(cfg, bsz=2, s=24, seed=0):
+    key = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(key, (bsz, s), 0, cfg.vocab),
+             "targets": jax.random.randint(key, (bsz, s), 0, cfg.vocab)}
+    if cfg.arch_type == "encdec":
+        batch["frontend"] = 0.1 * jax.random.normal(key, (bsz, 16, cfg.d_model))
+    elif cfg.frontend_positions:
+        p = cfg.frontend_positions
+        batch["frontend"] = 0.1 * jax.random.normal(key, (bsz, p, cfg.d_model))
+        batch["tokens"] = batch["tokens"][:, :s - p]
+        batch["targets"] = batch["targets"][:, :s - p]
+    return batch
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = {}
+    for arch in ARCHS:
+        cfg = dataclasses.replace(CFG.get_smoke(arch), dtype=jnp.float32)
+        params = MB.materialize(Z.templates(cfg), jax.random.PRNGKey(1))
+        out[arch] = (cfg, params)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_config_is_reduced(arch):
+    cfg = CFG.get_smoke(arch)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact assigned hyperparameters."""
+    want = {
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "rwkv6-1.6b": (24, 2048, None, None, 7168, 65536),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+    }[arch]
+    cfg = CFG.get(arch)
+    L, d, h, kv, ff, v = want
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.d_ff == ff and cfg.vocab == v
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    # family-specific invariants
+    if arch == "dbrx-132b":
+        assert cfg.n_experts == 16 and cfg.top_k == 4
+    if arch == "arctic-480b":
+        assert cfg.n_experts == 128 and cfg.top_k == 2 and cfg.dense_residual
+    if arch == "zamba2-1.2b":
+        assert cfg.ssm_state == 64 and cfg.arch_type == "hybrid"
+    if arch == "gemma3-27b":
+        assert cfg.sliding_window == 1024 and cfg.global_every == 6
+    if arch == "qwen3-8b":
+        assert cfg.qk_norm
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(models, arch):
+    cfg, params = models[arch]
+    batch = _batch(cfg)
+    logits, aux = Z.forward(params, cfg, batch)
+    b = batch["tokens"].shape[0]
+    want_s = batch["tokens"].shape[1]
+    if cfg.frontend_positions and cfg.arch_type != "encdec":
+        want_s += cfg.frontend_positions
+    assert logits.shape == (b, want_s, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_reduces_loss_and_finite(models, arch):
+    cfg, params = models[arch]
+    batch = _batch(cfg)
+    opt = adam(3e-3)
+    opt_state = opt.init(params)
+    l0 = float(Z.lm_loss(params, cfg, batch))
+    p1, opt_state, loss = Z.train_step(params, opt_state, batch, cfg, opt.update)
+    for _ in range(3):
+        p1, opt_state, loss = Z.train_step(p1, opt_state, batch, cfg, opt.update)
+    l1 = float(Z.lm_loss(p1, cfg, batch))
+    assert np.isfinite(l0) and np.isfinite(l1)
+    assert l1 < l0, f"loss did not decrease: {l0} -> {l1}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_and_decode_match_forward(models, arch):
+    cfg, params = models[arch]
+    batch = _batch(cfg)
+    logits, _ = Z.forward(params, cfg, batch)
+    cache = E.init_cache(cfg, 2, 48, enc_len=16)
+    lg, cache2 = E.prefill(params, cfg, batch, cache)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(logits[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+    # one decode step == forward over the extended sequence
+    tok = jnp.full((2, 1), 7, jnp.int32)
+    consumed = batch["tokens"].shape[1]
+    if cfg.frontend_positions and cfg.arch_type != "encdec":
+        consumed += cfg.frontend_positions
+    lg2, _ = E.decode_step(params, cfg, tok, cache2, jnp.int32(consumed))
+    b2 = dict(batch)
+    b2["tokens"] = jnp.concatenate([batch["tokens"], tok], axis=1)
+    b2["targets"] = jnp.concatenate([batch["targets"], tok], axis=1)
+    logits2, _ = Z.forward(params, cfg, b2)
+    np.testing.assert_allclose(np.asarray(lg2[:, 0]), np.asarray(logits2[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_router_balance_loss_positive(models):
+    cfg, params = models["dbrx-132b"]
+    batch = _batch(cfg)
+    _, aux = Z.forward(params, cfg, batch)
+    assert float(aux) > 0.0
+
+
+def test_gemma_ring_cache_matches_linear_for_short_seq(models):
+    """For sequences shorter than the window the ring cache is exact."""
+    cfg, params = models["gemma3-27b"]
+    assert cfg.sliding_window == 32
+    batch = _batch(cfg, s=16)
+    logits, _ = Z.forward(params, cfg, batch)
+    cache = E.init_cache(cfg, 2, 64)
+    lg, _ = E.prefill(params, cfg, batch, cache)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(logits[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gemma_long_decode_beyond_window(models):
+    """Decode far beyond the sliding window: ring cache still finite and
+    consistent with a full forward."""
+    cfg, params = models["gemma3-27b"]
+    w = cfg.sliding_window
+    s = w + 20                         # prompt longer than the window
+    batch = _batch(cfg, s=s)
+    cache = E.init_cache(cfg, 2, s + 8)
+    lg, cache2 = E.prefill(params, cfg, batch, cache)
+    logits, _ = Z.forward(params, cfg, batch)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(logits[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+    tok = jnp.full((2, 1), 3, jnp.int32)
+    lg2, _ = E.decode_step(params, cfg, tok, cache2, jnp.int32(s))
+    b2 = dict(batch)
+    b2["tokens"] = jnp.concatenate([batch["tokens"], tok], 1)
+    b2["targets"] = jnp.concatenate([batch["targets"], tok], 1)
+    logits2, _ = Z.forward(params, cfg, b2)
+    np.testing.assert_allclose(np.asarray(lg2[:, 0]), np.asarray(logits2[:, -1]),
+                               rtol=2e-3, atol=2e-3)

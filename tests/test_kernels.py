@@ -1,0 +1,106 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# cascade_score
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 512, 1000, 2048])
+@pytest.mark.parametrize("d,t", [(24, 3), (8, 1), (128, 8), (40, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cascade_score_sweep(n, d, t, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n * 131 + d), 3)
+    x = jax.random.normal(k1, (n, d), dtype)
+    w = (0.3 * jax.random.normal(k2, (t, d))).astype(dtype)
+    zq = jax.random.normal(k3, (t,), dtype)
+    got = np.asarray(ops.cascade_score(x, w, zq, interpret=True))
+    want = np.asarray(ops.cascade_score_ref(x, w, zq))
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+    assert got.shape == (n, t)
+
+
+def test_cascade_score_cumulative_structure():
+    """Output column j is column j-1 plus a non-positive increment."""
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (256, 24))
+    w = 0.3 * jax.random.normal(k, (4, 24))
+    zq = jnp.zeros((4,))
+    out = np.asarray(ops.cascade_score(x, w, zq, interpret=True))
+    assert (np.diff(out, axis=1) <= 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# swa_decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,hd", [(1, 4, 4, 64), (2, 8, 2, 64),
+                                        (3, 8, 1, 128), (2, 16, 16, 128)])
+@pytest.mark.parametrize("s,cache_len,window", [
+    (1024, 1000, ops.NO_WINDOW),
+    (1024, 511, 256),
+    (2048, 2047, 1024),
+    (512, 0, ops.NO_WINDOW),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_decode_sweep(b, h, hkv, hd, s, cache_len, window, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b * 7 + s), 3)
+    q = jax.random.normal(k1, (b, h, hd), dtype)
+    k = jax.random.normal(k2, (b, s, hkv, hd), dtype)
+    v = jax.random.normal(k3, (b, s, hkv, hd), dtype)
+    got = np.asarray(ops.swa_decode(q, k, v, cache_len, window=window,
+                                    interpret=True), np.float32)
+    want = np.asarray(ops.swa_decode_ref(q, k, v, cache_len, window), np.float32)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_swa_decode_matches_engine_reference():
+    """The kernel agrees with the engine's decode_attention path."""
+    from repro.models.layers import decode_attention
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    b, h, hkv, hd, s = 2, 8, 4, 64, 1024
+    cache_len = 700
+    q = jax.random.normal(k1, (b, 1, h, hd))
+    k = jax.random.normal(k2, (b, s, hkv, hd))
+    v = jax.random.normal(k3, (b, s, hkv, hd))
+    eng = decode_attention(q, k, v, q_offset=cache_len, valid_len=cache_len + 1)
+    ker = ops.swa_decode(q[:, 0], k, v, cache_len, interpret=True)
+    np.testing.assert_allclose(np.asarray(eng[:, 0]), np.asarray(ker),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_swa_decode_window_excludes_old_positions():
+    """With window=W, changing K/V outside the window must not change the
+    output."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    b, h, hkv, hd, s, w = 1, 4, 4, 64, 1024, 128
+    cache_len = 900
+    q = jax.random.normal(k1, (b, h, hd))
+    k = jax.random.normal(k2, (b, s, hkv, hd))
+    v = jax.random.normal(k3, (b, s, hkv, hd))
+    out1 = ops.swa_decode(q, k, v, cache_len, window=w, interpret=True)
+    k2_ = k.at[:, :cache_len - w].set(99.0)
+    v2_ = v.at[:, :cache_len - w].set(-99.0)
+    out2 = ops.swa_decode(q, k2_, v2_, cache_len, window=w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+@pytest.mark.parametrize("n,d,t", [(1000, 24, 3), (512, 8, 1), (2048, 40, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cascade_score_feature_major_sweep(n, d, t, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n + d), 3)
+    x = jax.random.normal(k1, (n, d), dtype)
+    w = (0.3 * jax.random.normal(k2, (t, d))).astype(dtype)
+    zq = jax.random.normal(k3, (t,), dtype)
+    got = np.asarray(ops.cascade_score_fm(x.T, w, zq, interpret=True))
+    want = np.asarray(ops.cascade_score_ref(x, w, zq))
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)

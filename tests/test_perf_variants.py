@@ -1,0 +1,138 @@
+"""Tests for the beyond-paper performance variants: they must be
+numerically equivalent to the faithful baselines (§Perf, EXPERIMENTS.md)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as CFG
+from repro.models import base as MB
+from repro.models import layers as Lyr
+from repro.models import zoo as Z
+
+
+@pytest.fixture(scope="module")
+def mamba_setup():
+    cfg = dataclasses.replace(CFG.get_smoke("zamba2-1.2b"), dtype=jnp.float32)
+    params = MB.materialize(Z.templates(cfg), jax.random.PRNGKey(0))
+    p_mix = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])["mixer"]
+    return cfg, p_mix
+
+
+@pytest.mark.parametrize("s,chunk", [(100, 16), (64, 64), (33, 8), (128, 128)])
+def test_chunked_ssd_matches_sequential_scan(mamba_setup, s, chunk):
+    cfg, p_mix = mamba_setup
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(s), (2, s, cfg.d_model))
+    y1, st1 = Lyr.mamba2_scan(p_mix, cfg, x)
+    y2, st2 = Lyr.mamba2_chunked(p_mix, cfg, x, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st1["ssm"]), np.asarray(st2["ssm"]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_ssd_with_initial_state(mamba_setup):
+    cfg, p_mix = mamba_setup
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(7), (2, 48, cfg.d_model))
+    shapes = Lyr.mamba2_scan(p_mix, cfg, x)[1]
+    st0 = {"conv": 0.3 * jax.random.normal(jax.random.PRNGKey(1),
+                                           shapes["conv"].shape),
+           "ssm": 0.3 * jax.random.normal(jax.random.PRNGKey(2),
+                                          shapes["ssm"].shape)}
+    y1, s1 = Lyr.mamba2_scan(p_mix, cfg, x, st0)
+    y2, s2 = Lyr.mamba2_chunked(p_mix, cfg, x, st0, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s1["ssm"]), np.asarray(s2["ssm"]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_full_model_forward_matches(mamba_setup):
+    """End-to-end zamba2 forward with ssm_impl=chunked == scan baseline."""
+    cfg, _ = mamba_setup
+    params = MB.materialize(Z.templates(cfg), jax.random.PRNGKey(3))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(4), (2, 40), 0,
+                                          cfg.vocab)}
+    l1, _ = Z.forward(params, cfg, batch)
+    cfg2 = dataclasses.replace(cfg, ssm_impl="chunked")
+    l2, _ = Z.forward(params, cfg2, batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_blockwise_attention_stats_composition():
+    """blockwise(return_stats) combined across two KV halves must equal the
+    full attention — the invariant the shard_map attention relies on."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, sq, h, hd, sk = 2, 16, 4, 32, 64
+    q = jax.random.normal(k1, (b, sq, h, hd))
+    k = jax.random.normal(k2, (b, sk, h, hd))
+    v = jax.random.normal(k3, (b, sk, h, hd))
+    full = Lyr.dot_attention(q, k, v, causal=True)
+    half = sk // 2
+    stats = []
+    for i, (ks, vs) in enumerate([(k[:, :half], v[:, :half]),
+                                  (k[:, half:], v[:, half:])]):
+        m, l, acc = Lyr.blockwise_attention(
+            q, ks, vs, causal=True, kv_chunk=16, k_offset=i * half,
+            return_stats=True)
+        stats.append((m, l, acc))
+    m_g = jnp.maximum(stats[0][0], stats[1][0])
+    l_g = sum(l * jnp.where(jnp.isfinite(m), jnp.exp(m - m_g), 0.0)
+              for m, l, _ in stats)
+    acc_g = sum(acc * jnp.where(jnp.isfinite(m), jnp.exp(m - m_g), 0.0)[..., None]
+                for m, _, acc in stats)
+    out = (acc_g / jnp.maximum(l_g, 1e-30)[..., None]).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full, np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.fixture(scope="module")
+def rwkv_setup():
+    cfg = dataclasses.replace(CFG.get_smoke("rwkv6-1.6b"), dtype=jnp.float32)
+    params = MB.materialize(Z.templates(cfg), jax.random.PRNGKey(0))
+    ptm = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])["tm"]
+    return cfg, ptm
+
+
+@pytest.mark.parametrize("s,chunk", [(70, 16), (64, 64), (33, 8)])
+def test_chunked_rwkv6_matches_sequential(rwkv_setup, s, chunk):
+    cfg, ptm = rwkv_setup
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(s), (2, s, cfg.d_model))
+    y1, s1 = Lyr.rwkv6_timemix(ptm, cfg, x)
+    y2, s2 = Lyr.rwkv6_timemix_chunked(ptm, cfg, x, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s1["wkv"]), np.asarray(s2["wkv"]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_rwkv6_with_state(rwkv_setup):
+    cfg, ptm = rwkv_setup
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(9), (2, 48, cfg.d_model))
+    shapes = Lyr.rwkv6_timemix(ptm, cfg, x)[1]
+    st0 = {"shift": 0.2 * jax.random.normal(jax.random.PRNGKey(1),
+                                            shapes["shift"].shape),
+           "wkv": 0.2 * jax.random.normal(jax.random.PRNGKey(2),
+                                          shapes["wkv"].shape)}
+    y1, s1 = Lyr.rwkv6_timemix(ptm, cfg, x, st0)
+    y2, s2 = Lyr.rwkv6_timemix_chunked(ptm, cfg, x, st0, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s1["wkv"]), np.asarray(s2["wkv"]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rwkv_full_model_chunked_matches(rwkv_setup):
+    cfg, _ = rwkv_setup
+    params = MB.materialize(Z.templates(cfg), jax.random.PRNGKey(5))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(6), (2, 40), 0,
+                                          cfg.vocab)}
+    l1, _ = Z.forward(params, cfg, batch)
+    l2, _ = Z.forward(params, dataclasses.replace(cfg, ssm_impl="chunked"),
+                      batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=5e-4, atol=5e-4)

@@ -1,0 +1,122 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cascade as C
+from repro.core import losses as L
+from repro.core import metrics as M
+from repro.data import features as F
+
+_settings = dict(max_examples=25, deadline=None)
+
+
+def _cfg_params(n_stages, seed, scale=0.5):
+    masks = F.default_stage_masks(n_stages)
+    cfg = C.CascadeConfig(n_stages, F.N_FEATURES, F.N_QUERY_BUCKETS, masks,
+                          F.stage_costs(masks))
+    params = C.init_params(cfg, jax.random.PRNGKey(seed), scale=scale)
+    return cfg, params
+
+
+@given(st.integers(1, 6), st.integers(0, 10**6))
+@settings(**_settings)
+def test_pass_prob_monotone_in_stages(n_stages, seed):
+    """Adding stages can only reject more: p_pass_k non-increasing in k,
+    for any number of stages and any weights."""
+    cfg, params = _cfg_params(n_stages, seed)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(3, 5, F.N_FEATURES)), jnp.float32)
+    q = jnp.asarray(np.eye(F.N_QUERY_BUCKETS)[rng.integers(0, 8, 3)], jnp.float32)
+    pp = np.asarray(C.pass_probs(params, cfg, x, q))
+    assert (np.diff(pp, axis=-1) <= 1e-6).all()
+    assert ((0 <= pp) & (pp <= 1)).all()
+
+
+@given(st.integers(0, 10**6), st.floats(0.01, 5.0))
+@settings(**_settings)
+def test_smooth_hinge_bounds(seed, gamma):
+    """ln2/gamma-offset upper bound and hinge lower bound (Eq 14)."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(0, 100, 50))
+    target = float(rng.normal(0, 100))
+    g = np.asarray(L.smooth_hinge(z, target, gamma))
+    hinge = np.maximum(target - np.asarray(z), 0)
+    assert (g >= hinge - 1e-4).all()
+    assert (g <= hinge + np.log(2) / gamma + 1e-4).all()
+
+
+@given(st.integers(0, 10**6))
+@settings(**_settings)
+def test_auc_invariant_under_monotone_transform(seed):
+    rng = np.random.default_rng(seed)
+    s = rng.normal(size=60)
+    y = (rng.random(60) < 0.4).astype(float)
+    if y.sum() in (0, len(y)):
+        return
+    a1 = M.auc(s, y)
+    a2 = M.auc(np.exp(2.0 * s) + 7.0, y)       # strictly monotone transform
+    assert abs(a1 - a2) < 1e-9
+
+
+@given(st.integers(0, 10**6))
+@settings(**_settings)
+def test_expected_cost_between_first_stage_and_total(seed):
+    """t_1 <= T(w)/item <= sum(t): can't be cheaper than stage 1 for all
+    items nor costlier than running everything everywhere."""
+    cfg, params = _cfg_params(3, seed)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 6, F.N_FEATURES)), jnp.float32)
+    q = jnp.asarray(np.eye(F.N_QUERY_BUCKETS)[rng.integers(0, 8, 2)], jnp.float32)
+    mask = jnp.ones((2, 6))
+    c = float(L.expected_cost(params, cfg, x, q, mask))
+    assert cfg.t[0] - 1e-5 <= c <= cfg.t.sum() + 1e-5
+
+
+@given(st.integers(0, 10**6), st.floats(1.0, 20.0), st.floats(1.0, 4.0))
+@settings(**_settings)
+def test_importance_weights_ordering(seed, eps, mu):
+    """purchase >= click >= none for any price >= e and eps >= 1."""
+    rng = np.random.default_rng(seed)
+    price = jnp.asarray(np.exp(rng.uniform(1.0, 6.0, 20)))
+    lcfg = L.LossConfig(eps_purchase=eps, mu_price=mu)
+    wn = np.asarray(L.importance_weights(jnp.zeros(20, jnp.int32), price, lcfg))
+    wc = np.asarray(L.importance_weights(jnp.ones(20, jnp.int32), price, lcfg))
+    wp = np.asarray(L.importance_weights(jnp.full(20, 2, jnp.int32), price, lcfg))
+    assert (wp >= wc - 1e-6).all()
+    assert (wn == 1.0).all()
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_query_group_permutation_invariance(seed):
+    """L3 is invariant to permuting items within a query group AND to
+    permuting query groups in the batch."""
+    cfg, params = _cfg_params(3, seed)
+    rng = np.random.default_rng(seed)
+    B, G = 3, 8
+    batch = {
+        "x": rng.normal(size=(B, G, F.N_FEATURES)).astype(np.float32),
+        "q": np.eye(F.N_QUERY_BUCKETS)[rng.integers(0, 8, B)].astype(np.float32),
+        "y": (rng.random((B, G)) < 0.3).astype(np.float32),
+        "mask": np.ones((B, G), np.float32),
+        "behavior": rng.integers(0, 3, (B, G)).astype(np.int32),
+        "price": np.exp(rng.normal(3, 1, (B, G))).astype(np.float32),
+        "m_q": rng.integers(50, 5000, B).astype(np.float32),
+    }
+    lcfg = L.LossConfig()
+    jb = {k: jnp.asarray(v) for k, v in batch.items()}
+    l0 = float(L.loss_l3(params, cfg, lcfg, jb))
+    # permute items inside each group
+    perm = rng.permutation(G)
+    jb2 = dict(jb)
+    for k in ("x", "y", "mask", "behavior", "price"):
+        jb2[k] = jb[k][:, perm]
+    assert abs(float(L.loss_l3(params, cfg, lcfg, jb2)) - l0) < 1e-4
+    # permute groups
+    permb = rng.permutation(B)
+    jb3 = {k: (v[permb] if hasattr(v, "shape") and v.shape[:1] == (B,) else v)
+           for k, v in jb.items()}
+    assert abs(float(L.loss_l3(params, cfg, lcfg, jb3)) - l0) < 1e-4

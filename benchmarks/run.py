@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     from benchmarks import (fig3_uninstall, fig4_user_experience,
                             fig5_peak_load, kernel_bench, roofline_report,
-                            table3_offline, table4_importance)
+                            serving_bench, table3_offline, table4_importance)
     suites = [
         ("table3", table3_offline.run),
         ("table4", table4_importance.run),
@@ -22,6 +22,7 @@ def main() -> None:
         ("fig4", fig4_user_experience.run),
         ("fig5", fig5_peak_load.run),
         ("kernels", kernel_bench.run),
+        ("serving", serving_bench.run),
         ("roofline", roofline_report.run),
     ]
     print("name,us_per_call,derived")

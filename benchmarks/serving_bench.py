@@ -1,0 +1,112 @@
+"""Serving-path throughput: items/sec through the hard cascade for the
+three serving implementations, over the batcher's shape buckets.
+
+  unfused-xla         — the pre-pipeline serving path, reproduced here as
+                        the baseline: separate XLA scoring, a SECOND
+                        scoring pass for the Eq-10 counts, a Python stage
+                        loop of double argsorts, and a THIRD scoring pass
+                        for the Eq-16 latency estimate, all dispatched
+                        eagerly (this is what CascadeServer.rank_batch did
+                        before core/pipeline.py existed).
+  fused-score         — the jitted pipeline with the fused scorer and the
+                        XLA stage chain.
+  fused-score+filter  — the jitted pipeline around the fused score+filter
+                        kernel: one scoring pass, no argsorts, latency
+                        from the pipeline's own counts (ops backend
+                        dispatch: Pallas on TPU, jitted XLA reference
+                        elsewhere).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call, trained_cloes
+from repro.core import cascade as C
+from repro.core import losses as L
+from repro.core import pipeline as P
+from repro.serving.cascade_server import CascadeServer
+
+BUCKETS = [(32, 64), (32, 256)]
+
+
+def _batch(b, g, d_x, d_q, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "x": rng.normal(size=(b, g, d_x)).astype(np.float32),
+        "q": np.eye(d_q)[rng.integers(0, d_q, b)].astype(np.float32),
+        "mask": np.ones((b, g), np.float32),
+        "m_q": rng.integers(g, 20 * g, b).astype(np.float32),
+    }
+
+
+def _seed_rank_batch(params, cfg, lcfg, batch):
+    """The pre-refactor CascadeServer.rank_batch, kept verbatim as the
+    unfused-XLA baseline (three scoring passes, 2T argsorts, eager)."""
+    x = jnp.asarray(batch["x"], jnp.float32)
+    q = jnp.asarray(batch["q"], jnp.float32)
+    mask = jnp.asarray(batch["mask"], jnp.float32)
+    m_q = jnp.asarray(batch["m_q"], jnp.float32)
+    G = x.shape[1]
+    lp = C.log_pass_probs(params, cfg, x, q)
+    counts = C.expected_counts_per_query(params, cfg, x, q, mask, m_q)
+    n_keep = jnp.clip(jnp.ceil(counts * mask.sum(-1, keepdims=True)
+                               / jnp.maximum(m_q[:, None], 1.0)), 1, G)
+    surv = mask
+    for j in range(cfg.n_stages):
+        s = jnp.where(surv > 0, lp[..., j], -jnp.inf)
+        rank = jnp.argsort(jnp.argsort(-s, axis=-1), axis=-1)
+        surv = surv * (rank < n_keep[:, j:j + 1]).astype(mask.dtype)
+    scores = jnp.where(surv > 0, lp[..., -1], -jnp.inf)
+    lat = L.expected_latency_per_query(params, cfg, lcfg, x, q, mask, m_q)
+    return scores, surv, lat
+
+
+def run():
+    params, cfg, lcfg = trained_cloes()
+    srv = CascadeServer(params, cfg, lcfg, use_fused_kernel=True)
+    srv.warmup()
+
+    @partial(jax.jit, static_argnames=())
+    def fused_score_pipeline(p, x, q, mask, m_q):
+        out = P.run_cascade(p, cfg, x, q, mask, m_q, fused="score")
+        lat = P.latency_from_counts(out["expected_counts"], m_q, cfg,
+                                    lcfg.latency_scale,
+                                    lcfg.latency_convention)
+        return out["scores"], out["survivors"][..., -1], lat
+
+    results = {}
+    for b, g in BUCKETS:
+        batch = _batch(b, g, cfg.d_x, cfg.d_q)
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        items = b * g
+
+        us_unfused = time_call(
+            lambda: _seed_rank_batch(params, cfg, lcfg, batch))
+        us_score = time_call(
+            lambda: fused_score_pipeline(params, jb["x"], jb["q"],
+                                         jb["mask"], jb["m_q"]))
+        us_filter = time_call(lambda: srv.rank_batch(batch)["scores"])
+
+        rows = [("unfused_xla", us_unfused), ("fused_score", us_score),
+                ("fused_score_filter", us_filter)]
+        for name, us in rows:
+            ips = items / (us / 1e6)
+            emit(f"serving/{name}_b{b}_g{g}", us,
+                 f"items_per_sec={ips:.0f};speedup_vs_unfused="
+                 f"{us_unfused / us:.2f}x")
+        results[(b, g)] = dict(rows)
+
+    r = results[(32, 256)]
+    assert r["fused_score_filter"] <= r["unfused_xla"], (
+        "fused score+filter pipeline must at least match unfused-XLA "
+        f"throughput on (32, 256): {r}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -37,6 +37,10 @@ def main():
     ncfg = dataclasses.replace(CFG.get_smoke(args.arch), dtype=jnp.float32)
     neural = NeuralScorer.create(ncfg, jax.random.PRNGKey(7))
     srv = CascadeServer(params, cfg, neural_stage=neural)
+    t0 = time.time()
+    shapes = srv.warmup()        # compile every serving shape bucket up front
+    print(f"warmed {len(shapes)} shape buckets {shapes} "
+          f"in {time.time() - t0:.1f}s")
 
     rng = np.random.default_rng(0)
     n_te = te.x.shape[0]

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI entry point: fast loop first (fail fast on logic regressions), then
+# the full tier-1 suite. See ROADMAP.md "Verification loops".
+#
+#   FAST_TIMEOUT / FULL_TIMEOUT   override the per-phase timeouts (seconds)
+#   SKIP_FULL=1                   run only the fast loop (local pre-commit)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== fast loop: pytest -m 'not slow' (target < 90 s) =="
+timeout "${FAST_TIMEOUT:-300}" python -m pytest -q -m "not slow"
+
+if [[ "${SKIP_FULL:-0}" != "1" ]]; then
+    echo "== full tier-1: pytest -x -q =="
+    timeout "${FULL_TIMEOUT:-900}" python -m pytest -x -q
+fi

@@ -133,28 +133,19 @@ def hard_cascade_filter(params: Params, cfg: CascadeConfig,
     items by cumulative score ('this expected number ... served as the
     threshold for filtering out items in the corresponding stage').
 
+    Thin wrapper over core.pipeline.run_cascade — the single stage-filter
+    implementation shared with serving.CascadeServer.
+
     Returns the survival mask after each stage (B, G, T), the final scores,
     and the per-stage survivor counts actually used.
     """
-    B, G = mask.shape
-    lp = log_pass_probs(params, cfg, x, q)                # (B, G, T)
-    counts = expected_counts_per_query(params, cfg, x, q, mask, m_q)  # (B, T)
-    # survivors bounded by the group: cap E[Count] to the number of scored items
-    n_keep = jnp.clip(jnp.ceil(counts * mask.sum(-1, keepdims=True)
-                               / jnp.maximum(m_q[:, None], 1.0)), 1, G)
-    surv = mask
-    surv_stages = []
-    for j in range(cfg.n_stages):
-        s = jnp.where(surv > 0, lp[..., j], -jnp.inf)      # (B, G)
-        order = jnp.argsort(-s, axis=-1)
-        rank = jnp.argsort(order, axis=-1).astype(jnp.float32)
-        surv = surv * (rank < n_keep[:, j:j + 1]).astype(mask.dtype)
-        surv_stages.append(surv)
+    from repro.core import pipeline as P  # local: pipeline imports this module
+    out = P.run_cascade(params, cfg, x, q, mask, m_q, fused="none")
     return {
-        "survivors": jnp.stack(surv_stages, axis=-1),      # (B, G, T)
-        "scores": lp[..., -1],
-        "kept_per_stage": jnp.stack(surv_stages, -1).sum(1),  # (B, T)
-        "expected_counts": counts,
+        "survivors": out["survivors"],                     # (B, G, T)
+        "scores": out["scores"],
+        "kept_per_stage": out["kept_per_stage"],           # (B, T)
+        "expected_counts": out["expected_counts"],
     }
 
 

@@ -1,9 +1,14 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-On this CPU container the kernels execute through the Pallas interpreter
-(interpret=True) — the kernel *body* runs and is numerically validated; on a
-real TPU runtime the same call sites compile to Mosaic. `interpret` defaults
-to auto-detection.
+Backend dispatch: the kernels are written for TPU (Mosaic). With
+``interpret=None`` (the default) each wrapper picks the fastest correct
+implementation for the current backend — the compiled Pallas kernel on
+TPU; on CPU/GPU the cascade serving wrappers dispatch to their
+identical-semantics jitted XLA reference (interpreter speed would be
+prohibitive on the serving hot path), while ``swa_decode`` runs the
+Pallas interpreter. Passing ``interpret=True`` always forces the Pallas
+interpreter — that is what the parity test sweeps use to validate the
+kernel bodies; passing ``interpret=False`` demands the compiled kernel.
 """
 
 from __future__ import annotations
@@ -11,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.cascade_filter.kernel import cascade_filter as _cascade_filter
+from repro.kernels.cascade_filter.ref import cascade_filter_ref
 from repro.kernels.cascade_score.kernel import (cascade_score as _cascade_score,
                                                 cascade_score_fm as _cascade_score_fm)
 from repro.kernels.cascade_score.ref import cascade_score_ref
@@ -24,9 +31,14 @@ def _auto_interpret() -> bool:
 
 def cascade_score(x, w_eff, zq, *, interpret: bool | None = None):
     """Fused T-stage cascade scoring: (N, d) items -> (N, T) cumulative
-    log pass-probabilities. See kernels/cascade_score/kernel.py."""
+    log pass-probabilities. See kernels/cascade_score/kernel.py.
+
+    Serving hot path: dispatches to the jitted XLA reference on non-TPU
+    backends (interpret=True forces the Pallas interpreter)."""
     if interpret is None:
-        interpret = _auto_interpret()
+        if _auto_interpret():
+            return cascade_score_ref(x, w_eff, zq)
+        interpret = False
     return _cascade_score(x, w_eff, zq, interpret=interpret)
 
 
@@ -34,8 +46,26 @@ def cascade_score_fm(xt, w_eff, zq, *, interpret: bool | None = None):
     """Feature-major fused scorer: xt (d, N) -> (N, T). The production
     layout — see kernels/cascade_score/kernel.py."""
     if interpret is None:
-        interpret = _auto_interpret()
+        if _auto_interpret():
+            return cascade_score_ref(xt.T, w_eff, zq)
+        interpret = False
     return _cascade_score_fm(xt, w_eff, zq, interpret=interpret)
+
+
+def cascade_filter(x, w_eff, zq, mask, m_q, *, interpret: bool | None = None):
+    """Fused score+filter hard cascade: x (B, G, d), zq (B, T),
+    mask (B, G), m_q (B,) -> dict(lp, survivors, expected_counts, n_keep).
+
+    The serving hot path: on TPU this is one kernel launch per batch; on
+    other backends it dispatches to the jitted XLA reference (identical
+    semantics — see kernels/cascade_filter/ref.py) rather than crawling
+    through the Pallas interpreter. interpret=True forces the interpreter
+    for kernel-body parity testing."""
+    if interpret is None:
+        if _auto_interpret():
+            return cascade_filter_ref(x, w_eff, zq, mask, m_q)
+        interpret = False
+    return _cascade_filter(x, w_eff, zq, mask, m_q, interpret=interpret)
 
 
 def swa_decode(q, k, v, cache_len, *, window: int = NO_WINDOW,
@@ -47,5 +77,6 @@ def swa_decode(q, k, v, cache_len, *, window: int = NO_WINDOW,
     return _swa_decode(q, k, v, cache_len, window=window, interpret=interpret)
 
 
-__all__ = ["cascade_score", "cascade_score_fm", "cascade_score_ref", "swa_decode",
+__all__ = ["cascade_score", "cascade_score_fm", "cascade_score_ref",
+           "cascade_filter", "cascade_filter_ref", "swa_decode",
            "swa_decode_ref", "NO_WINDOW"]

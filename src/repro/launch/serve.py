@@ -45,6 +45,10 @@ def main() -> None:
         neural = NeuralScorer.create(ncfg, jax.random.PRNGKey(7))
         print(f"[serve] neural final stage: {ncfg.name}")
     srv = CascadeServer(params, cfg, neural_stage=neural)
+    t0 = time.time()
+    shapes = srv.warmup()
+    print(f"[serve] warmed {len(shapes)} shape buckets in "
+          f"{time.time() - t0:.1f}s")
 
     rng = np.random.default_rng(args.seed)
     n_te = te.x.shape[0]
@@ -58,6 +62,9 @@ def main() -> None:
             m_q=int(te.m_q[qi])))
     resps = srv.serve()
     wall = time.time() - t0
+    if not resps:
+        print("[serve] no requests submitted — nothing to report")
+        return
     lats = np.array([r.est_latency_ms for r in resps])
     surv = np.array([r.survivors.sum() for r in resps])
     print(f"[serve] {len(resps)} responses in {wall:.2f}s "

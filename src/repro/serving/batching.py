@@ -69,7 +69,15 @@ class RequestBatcher:
                 yield chunk, self._pad(chunk, g)
 
     def _pad(self, reqs: list[RankRequest], g: int) -> dict:
-        b = len(reqs)
+        # The batch axis is padded to the next power of two (capped at
+        # batch_groups): full batches always hit the warm
+        # (batch_groups, bucket) compilation, while a short drain tail
+        # compiles at most log2(batch_groups) extra shapes AND pays at
+        # most 2x the per-row compute of its real requests — padding
+        # straight to batch_groups would run e.g. the neural final stage
+        # on 32 rows to serve one. Padded rows are all-masked and never
+        # surfaced (responses index only the real requests).
+        b = min(self.batch_groups, 1 << (len(reqs) - 1).bit_length())
         d_x = reqs[0].item_feats.shape[-1]
         d_q = reqs[0].q_feat.shape[-1]
         x = np.zeros((b, g, d_x), np.float32)
@@ -83,3 +91,28 @@ class RequestBatcher:
             mask[i, :n] = 1.0
             m_q[i] = r.m_q
         return {"x": x, "q": q, "mask": mask, "m_q": m_q}
+
+    def warmup(self, rank_fn, d_x: int, d_q: int) -> list[tuple[int, int]]:
+        """Drive rank_fn once per serving shape so every jit compilation
+        happens up front, not on the first live request. The shape set is
+        every (b, bucket) with b a power of two up to batch_groups — the
+        exact shapes _pad can emit, including drain-tail batches.
+        Returns the list of warmed shapes."""
+        bs = []
+        b = 1
+        while b < self.batch_groups:
+            bs.append(b)
+            b <<= 1
+        bs.append(self.batch_groups)
+        shapes = []
+        for g in self.buckets:
+            for b in bs:
+                batch = {
+                    "x": np.zeros((b, g, d_x), np.float32),
+                    "q": np.zeros((b, d_q), np.float32),
+                    "mask": np.ones((b, g), np.float32),
+                    "m_q": np.full((b,), float(g), np.float32),
+                }
+                rank_fn(batch)
+                shapes.append((b, g))
+        return shapes

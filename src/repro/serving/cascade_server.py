@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core import cascade as C
 from repro.core import losses as L
-from repro.kernels import ops as K
+from repro.core import pipeline as P
 from repro.models import base as MB
 from repro.models import zoo as Z
 from repro.serving.batching import RankRequest, RankResponse, RequestBatcher
@@ -100,50 +100,40 @@ class CascadeServer:
         self.neural_cost = neural_cost
         self.use_fused_kernel = use_fused_kernel
         self.batcher = RequestBatcher()
+        # The whole serving pipeline (scoring -> filtering -> latency
+        # estimate) is ONE jitted function; the batcher's fixed shape
+        # buckets keep its compile cache small. Only mask (B, G) and m_q
+        # (B,) are donated — the only inputs whose buffers can alias an
+        # output shape; donating x/q would just warn (donation is
+        # unsupported on CPU altogether).
+        self._donates = jax.default_backend() != "cpu"
+        donate = (3, 4) if self._donates else ()
+        self._rank = jax.jit(self._rank_impl, donate_argnums=donate)
 
-    # -- scoring ---------------------------------------------------------
+    # -- the jitted pipeline ---------------------------------------------
 
-    def _stage_scores(self, x: jax.Array, q: jax.Array) -> jax.Array:
-        """(B, G, d_x), (B, d_q) -> (B, G, T) cumulative log pass-probs."""
-        if self.use_fused_kernel:
-            masks = jnp.asarray(self.cfg.masks, jnp.float32)
-            w_eff = self.params["w_x"] * masks                # (T, d)
-            zq = q @ self.params["w_q"].T + self.params["b"]  # (B, T)
-            fn = jax.vmap(lambda xb, zqb: K.cascade_score(xb, w_eff, zqb))
-            return fn(x, zq)
-        return C.log_pass_probs(self.params, self.cfg, x, q)
-
-    def rank_batch(self, batch: dict) -> dict:
-        """Run the hard cascade on a padded batch; returns arrays."""
-        x = jnp.asarray(batch["x"], jnp.float32)
-        q = jnp.asarray(batch["q"], jnp.float32)
-        mask = jnp.asarray(batch["mask"], jnp.float32)
-        m_q = jnp.asarray(batch["m_q"], jnp.float32)
-        B, G, _ = x.shape
-        lp = self._stage_scores(x, q)                          # (B, G, T)
-        counts = C.expected_counts_per_query(
-            self.params, self.cfg, x, q, mask, m_q)            # (B, T)
-        n_keep = jnp.clip(jnp.ceil(counts * mask.sum(-1, keepdims=True)
-                                   / jnp.maximum(m_q[:, None], 1.0)), 1, G)
-        surv = mask
-        stage_surv = []
-        for j in range(self.cfg.n_stages):
-            s = jnp.where(surv > 0, lp[..., j], -jnp.inf)
-            rank = jnp.argsort(jnp.argsort(-s, axis=-1), axis=-1)
-            surv = surv * (rank < n_keep[:, j:j + 1]).astype(mask.dtype)
-            stage_surv.append(surv)
-        final_scores = jnp.where(surv > 0, lp[..., -1], -jnp.inf)
+    def _rank_impl(self, params: C.Params, x: jax.Array, q: jax.Array,
+                   mask: jax.Array, m_q: jax.Array) -> dict:
+        """Score -> hard filter -> latency estimate, end to end."""
+        out = P.run_cascade(params, self.cfg, x, q, mask, m_q,
+                            fused="filter" if self.use_fused_kernel else "none")
+        surv = out["survivors"][..., -1]
+        final_scores = jnp.where(surv > 0, out["scores"], -jnp.inf)
 
         if self.neural is not None:
             # expensive stage: score only survivors (flattened, padded)
-            flat = x.reshape(B * G, -1)
-            nscore = self.neural.score(flat).reshape(B, G)
+            b, g, _ = x.shape
+            flat = x.reshape(b * g, -1)
+            nscore = self.neural.score(flat).reshape(b, g)
             final_scores = jnp.where(surv > 0,
                                      final_scores + nscore.astype(jnp.float32),
                                      -jnp.inf)
 
-        lat = L.expected_latency_per_query(
-            self.params, self.cfg, self.lcfg, x, q, mask, m_q)
+        # Eq-16 latency from the pipeline's own expected counts — no
+        # re-scoring of the batch (the old path scored it a second time).
+        lat = P.latency_from_counts(out["expected_counts"], m_q, self.cfg,
+                                    self.lcfg.latency_scale,
+                                    self.lcfg.latency_convention)
         if self.neural is not None:
             lat = lat + (self.lcfg.latency_scale * self.neural_cost
                          * surv.sum(-1) / jnp.maximum(mask.sum(-1), 1)
@@ -151,9 +141,28 @@ class CascadeServer:
         return {
             "scores": final_scores,
             "survivors": surv,
-            "stage_survivors": jnp.stack(stage_surv, -1),
+            "stage_survivors": out["survivors"],
             "est_latency_ms": lat,
         }
+
+    def rank_batch(self, batch: dict) -> dict:
+        """Run the jitted hard-cascade pipeline on a padded batch."""
+        def dev(v):
+            # jnp.asarray is a no-op for a float32 jax array, and donating
+            # that would invalidate the CALLER'S buffer — copy instead.
+            # numpy inputs (the batcher path) already land in fresh,
+            # safely-donatable device buffers.
+            if self._donates and isinstance(v, jax.Array):
+                return jnp.array(v, jnp.float32, copy=True)
+            return jnp.asarray(v, jnp.float32)
+        return self._rank(self.params,
+                          jnp.asarray(batch["x"], jnp.float32),
+                          jnp.asarray(batch["q"], jnp.float32),
+                          dev(batch["mask"]), dev(batch["m_q"]))
+
+    def warmup(self) -> list[tuple[int, int]]:
+        """Pre-compile the pipeline for every batcher shape bucket."""
+        return self.batcher.warmup(self.rank_batch, self.cfg.d_x, self.cfg.d_q)
 
     # -- request API ------------------------------------------------------
 

@@ -19,6 +19,14 @@ import repro.configs as CFG
 from repro.data import generate_log, LogConfig
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running per-architecture smoke / perf-variant tests; "
+        "the fast loop (-m 'not slow', target < 90 s) excludes them — see "
+        "ROADMAP.md 'Verification loops'")
+
+
 @pytest.fixture(scope="session")
 def small_log():
     return generate_log(LogConfig(n_queries=300, items_per_query=32, seed=11))

@@ -83,6 +83,7 @@ def test_full_config_matches_assignment(arch):
         assert cfg.qk_norm
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_forward_shapes_and_finite(models, arch):
     cfg, params = models[arch]
@@ -96,6 +97,7 @@ def test_forward_shapes_and_finite(models, arch):
     assert bool(jnp.isfinite(logits).all())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_one_train_step_reduces_loss_and_finite(models, arch):
     cfg, params = models[arch]
@@ -111,6 +113,7 @@ def test_one_train_step_reduces_loss_and_finite(models, arch):
     assert l1 < l0, f"loss did not decrease: {l0} -> {l1}"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_prefill_and_decode_match_forward(models, arch):
     cfg, params = models[arch]
@@ -134,6 +137,7 @@ def test_prefill_and_decode_match_forward(models, arch):
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_moe_router_balance_loss_positive(models):
     cfg, params = models["dbrx-132b"]
     batch = _batch(cfg)
@@ -141,6 +145,7 @@ def test_moe_router_balance_loss_positive(models):
     assert float(aux) > 0.0
 
 
+@pytest.mark.slow
 def test_gemma_ring_cache_matches_linear_for_short_seq(models):
     """For sequences shorter than the window the ring cache is exact."""
     cfg, params = models["gemma3-27b"]
@@ -153,6 +158,7 @@ def test_gemma_ring_cache_matches_linear_for_short_seq(models):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_gemma_long_decode_beyond_window(models):
     """Decode far beyond the sliding window: ring cache still finite and
     consistent with a full forward."""

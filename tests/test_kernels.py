@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops
+from repro.kernels.cascade_filter.kernel import cascade_filter
+from repro.kernels.cascade_filter.ref import cascade_filter_ref
 
 
 # ---------------------------------------------------------------------------
@@ -38,15 +40,95 @@ def test_cascade_score_cumulative_structure():
 
 
 # ---------------------------------------------------------------------------
+# cascade_filter (fused score+filter)
+# ---------------------------------------------------------------------------
+
+def _filter_case(b, g, d, t, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, g, d)), dtype)
+    w = jnp.asarray(0.3 * rng.normal(size=(t, d)), dtype)
+    zq = jnp.asarray(rng.normal(size=(b, t)), dtype)
+    mask = jnp.asarray(rng.random((b, g)) < 0.85, jnp.float32)
+    m_q = jnp.asarray(rng.integers(1, 4 * g + 2, b), jnp.float32)
+    return x, w, zq, mask, m_q
+
+
+def _assert_filter_parity(x, w, zq, mask, m_q, tol):
+    got = cascade_filter(x, w, zq, mask, m_q, interpret=True)
+    want = cascade_filter_ref(x, w, zq, mask, m_q)
+    np.testing.assert_allclose(np.asarray(got["lp"]), np.asarray(want["lp"]),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(got["expected_counts"]),
+                               np.asarray(want["expected_counts"]),
+                               rtol=tol, atol=tol)
+    # the discrete outputs must be BIT-identical, ties included
+    np.testing.assert_array_equal(np.asarray(got["n_keep"]),
+                                  np.asarray(want["n_keep"]))
+    np.testing.assert_array_equal(np.asarray(got["survivors"]),
+                                  np.asarray(want["survivors"]))
+    return got
+
+
+@pytest.mark.parametrize("g", [1, 7, 48, 130,
+                               pytest.param(256, marks=pytest.mark.slow)])
+@pytest.mark.parametrize("d,t", [(24, 3), (8, 1), (40, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cascade_filter_sweep(g, d, t, dtype):
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    _assert_filter_parity(*_filter_case(2, g, d, t, dtype, seed=g * 37 + d),
+                          tol=tol)
+
+
+def test_cascade_filter_tied_scores():
+    """Duplicated items produce exact score ties; the kernel's stable
+    rank must break them identically to the oracle's stable argsort."""
+    x, w, zq, mask, m_q = _filter_case(3, 64, 24, 3, jnp.float32, seed=0)
+    x = x.at[:, 1::2].set(x[:, ::2])           # every item has a twin
+    mask = jnp.ones_like(mask)
+    got = _assert_filter_parity(x, w, zq, mask, m_q, tol=1e-5)
+    surv = np.asarray(got["survivors"])
+    assert 0 < surv[..., -1].sum() < surv.shape[0] * surv.shape[1]
+
+
+def test_cascade_filter_fully_masked_group():
+    x, w, zq, mask, m_q = _filter_case(3, 32, 24, 3, jnp.float32, seed=1)
+    mask = mask.at[1].set(0.0)
+    got = _assert_filter_parity(x, w, zq, mask, m_q, tol=1e-5)
+    assert np.asarray(got["survivors"])[1].sum() == 0
+
+
+def test_cascade_filter_mq_exceeds_group():
+    """m_q >> G: keep counts must clip at the group size, keeping all."""
+    x, w, zq, mask, m_q = _filter_case(2, 16, 24, 2, jnp.float32, seed=2)
+    mask = jnp.ones_like(mask)
+    zq = jnp.full_like(zq, 8.0)                 # near-certain pass probs
+    got = _assert_filter_parity(x, w, zq, mask, jnp.full_like(m_q, 1e6),
+                                tol=1e-5)
+    assert (np.asarray(got["n_keep"]) == 16).all()
+    assert (np.asarray(got["survivors"])[..., -1] == 1).all()
+
+
+def test_cascade_filter_chain_is_nested():
+    """Stage j survivors are a subset of stage j-1 survivors."""
+    x, w, zq, mask, m_q = _filter_case(4, 96, 24, 4, jnp.float32, seed=3)
+    got = cascade_filter(x, w, zq, mask, m_q, interpret=True)
+    surv = np.asarray(got["survivors"])
+    assert (np.diff(surv, axis=-1) <= 0).all()
+    assert (surv[..., 0] <= np.asarray(mask)).all()
+
+
+# ---------------------------------------------------------------------------
 # swa_decode
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("b,h,hkv,hd", [(1, 4, 4, 64), (2, 8, 2, 64),
-                                        (3, 8, 1, 128), (2, 16, 16, 128)])
+@pytest.mark.parametrize("b,h,hkv,hd", [
+    (1, 4, 4, 64), (2, 8, 2, 64), (3, 8, 1, 128),
+    pytest.param(2, 16, 16, 128, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("s,cache_len,window", [
     (1024, 1000, ops.NO_WINDOW),
     (1024, 511, 256),
-    (2048, 2047, 1024),
+    pytest.param(2048, 2047, 1024, marks=pytest.mark.slow),
     (512, 0, ops.NO_WINDOW),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -9,6 +9,8 @@ import numpy as np
 import pytest
 
 import repro.configs as CFG
+
+pytestmark = pytest.mark.slow
 from repro.models import base as MB
 from repro.models import layers as Lyr
 from repro.models import zoo as Z

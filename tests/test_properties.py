@@ -1,9 +1,67 @@
-"""Property-based tests (hypothesis) for the system's invariants."""
+"""Property-based tests (hypothesis) for the system's invariants.
+
+When hypothesis is not installed (minimal CI containers), the tests do
+NOT skip: a small deterministic parameter sweep stands in for the
+random search, so every invariant below still executes against a
+representative grid of its domain (bounds, midpoints, interior points).
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # deterministic fallback sweep
+    class _Grid:
+        """Stand-in for a hypothesis strategy: a fixed sample grid."""
+
+        def __init__(self, values):
+            self.values = list(dict.fromkeys(values))  # dedupe, keep order
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(lo, hi):
+            span = hi - lo
+            return _Grid([lo, hi, lo + span // 2, lo + span // 3,
+                          lo + (2 * span) // 3])
+
+        @staticmethod
+        def floats(lo, hi):
+            span = hi - lo
+            return _Grid([lo, hi, lo + 0.5 * span, lo + 0.123 * span,
+                          lo + 0.789 * span])
+
+    def given(*strategies):
+        def deco(fn):
+            # Interleaved sampling, NOT a truncated itertools.product: a
+            # truncated product pins the leading strategies to their first
+            # value. Per-strategy coprime strides make every strategy
+            # sweep its full grid within the case budget.
+            def stride(j, n):
+                s = j + 1
+                while n > 1 and np.gcd(s, n) != 1:
+                    s += 1
+                return s
+
+            grids = [s.values for s in strategies]
+            cases = list(dict.fromkeys(
+                tuple(g[(i * stride(j, len(g))) % len(g)]
+                      for j, g in enumerate(grids))
+                for i in range(25)))
+
+            def wrapper():
+                for case in cases:
+                    fn(*case)
+            # bare-name copy only: pytest must see a zero-arg test, not
+            # the wrapped signature (those names would look like fixtures)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(**_kw):
+        return lambda fn: fn
 
 from repro.core import cascade as C
 from repro.core import losses as L

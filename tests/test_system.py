@@ -91,17 +91,54 @@ def test_server_with_neural_final_stage(trained):
 
 
 def test_fused_kernel_path_matches_xla_path(trained):
+    """The fused score+filter pipeline must reproduce the unfused XLA
+    path EXACTLY: same survivor sets at every stage, same orderings."""
     params, cfg, lcfg, tr, te = trained
     batch = {"x": te.x[:4].astype(np.float32), "q": te.q[:4].astype(np.float32),
              "mask": te.mask[:4].astype(np.float32),
              "m_q": te.m_q[:4].astype(np.float32)}
     a = CascadeServer(params, cfg, lcfg, use_fused_kernel=True).rank_batch(batch)
     b = CascadeServer(params, cfg, lcfg, use_fused_kernel=False).rank_batch(batch)
-    np.testing.assert_allclose(np.asarray(a["survivors"]),
-                               np.asarray(b["survivors"]))
+    # identical survivor sets — final AND per-stage
+    np.testing.assert_array_equal(np.asarray(a["survivors"]),
+                                  np.asarray(b["survivors"]))
+    np.testing.assert_array_equal(np.asarray(a["stage_survivors"]),
+                                  np.asarray(b["stage_survivors"]))
     sa, sb = np.asarray(a["scores"]), np.asarray(b["scores"])
     finite = np.isfinite(sa)
+    np.testing.assert_array_equal(finite, np.isfinite(sb))
     np.testing.assert_allclose(sa[finite], sb[finite], rtol=1e-4, atol=1e-5)
+    # identical orderings (stable argsort over each path's own scores)
+    np.testing.assert_array_equal(np.argsort(-sa, axis=-1, kind="stable"),
+                                  np.argsort(-sb, axis=-1, kind="stable"))
+    la, lb = np.asarray(a["est_latency_ms"]), np.asarray(b["est_latency_ms"])
+    np.testing.assert_allclose(la, lb, rtol=1e-4, atol=1e-5)
+
+
+def test_served_responses_identical_across_paths(trained):
+    """Full submit->serve loop: fused and unfused servers return the same
+    orders, survivor sets, and stage counts for the same requests."""
+    params, cfg, lcfg, tr, te = trained
+    n = te.x.shape[0]
+
+    def responses(use_fused):
+        srv = CascadeServer(params, cfg, lcfg, use_fused_kernel=use_fused)
+        r2 = np.random.default_rng(7)
+        for i in range(6):
+            qi, k = int(r2.integers(0, n)), int(r2.integers(4, 48))
+            srv.submit(RankRequest(request_id=i,
+                                   q_feat=te.q[qi].astype(np.float32),
+                                   item_feats=te.x[qi, :k].astype(np.float32),
+                                   m_q=int(te.m_q[qi])))
+        return {r.request_id: r for r in srv.serve()}
+
+    fused, plain = responses(True), responses(False)
+    assert fused.keys() == plain.keys()
+    for rid in fused:
+        np.testing.assert_array_equal(fused[rid].order, plain[rid].order)
+        np.testing.assert_array_equal(fused[rid].survivors,
+                                      plain[rid].survivors)
+        assert fused[rid].stage_counts == plain[rid].stage_counts
 
 
 def test_ux_penalties_improve_tail_counts(trained):

@@ -14,7 +14,8 @@ import traceback
 def main() -> None:
     from benchmarks import (fig3_uninstall, fig4_user_experience,
                             fig5_peak_load, kernel_bench, roofline_report,
-                            serving_bench, table3_offline, table4_importance)
+                            serving_bench, table3_offline, table4_importance,
+                            train_bench)
     suites = [
         ("table3", table3_offline.run),
         ("table4", table4_importance.run),
@@ -23,6 +24,7 @@ def main() -> None:
         ("fig5", fig5_peak_load.run),
         ("kernels", kernel_bench.run),
         ("serving", serving_bench.run),
+        ("train", train_bench.run),
         ("roofline", roofline_report.run),
     ]
     print("name,us_per_call,derived")

@@ -1,0 +1,199 @@
+"""Training-engine throughput: steps/sec and epoch wall-clock for the L3
+objective at the default TrainConfig, across the three engine variants:
+
+  loop        — the pre-PR trainer: a Python loop dispatching one jitted
+                step per minibatch (seven host->device uploads each) with
+                the pre-refactor MULTI-FORWARD losses (four cascade
+                scoring passes per L3 step: NLL, Eq-8 cost, and two
+                expected-count passes for the UX penalties).
+  scan_donate — device-resident epochs: the log uploaded once, minibatch
+                gathers on device, one `jax.lax.scan` per epoch with
+                donated (params, opt_state) — still the multi-forward
+                reference losses. Isolates the scan/donation win.
+  scan_fused  — scan epochs + the single-forward losses (one shared
+                cascade forward + the stop-gradient penalty variant,
+                through the fused scorer op). The shipped default.
+
+Writes BENCH_train.json (gitignored — machine-local numbers) and asserts
+the shipped engine is >= 2x the pre-PR loop in steps/sec.
+
+  PYTHONPATH=src python -m benchmarks.train_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import cascade as C
+from repro.core import losses as L
+from repro.core import trainer as T
+from repro.data import LogConfig, features as F, generate_log
+from repro.optim.sgd import momentum_sgd
+
+BENCH_JSON = "BENCH_train.json"
+
+
+# ---------------------------------------------------------------------------
+# Pre-refactor reference L3: four independent cascade forwards per step,
+# kept verbatim as the baseline objective (see also the parity suite in
+# tests/test_train_engine.py, which pins the same reference).
+# ---------------------------------------------------------------------------
+
+def reference_loss_l3(params, cfg, lcfg, batch):
+    x, q, mask, m_q = batch["x"], batch["q"], batch["mask"], batch["m_q"]
+    # forward 1: NLL (per-step importance weights, as pre-refactor)
+    wgt = (L.importance_weights(batch["behavior"], batch["price"], lcfg)
+           if batch.get("behavior") is not None else batch.get("wgt"))
+    nll = L.nll_from_lp(C.log_pass_probs(params, cfg, x, q),
+                        batch["y"], mask, wgt)
+    # forward 2: Eq-8 cost from a fresh pass_probs pass
+    y_cost = batch["y"] if lcfg.cost_mask_positives else None
+    w = mask if y_cost is None else mask * (1.0 - y_cost)
+    n_q = jnp.maximum(mask.sum(axis=-1), 1.0)
+    w = w * (m_q / n_q)[:, None]
+    n = jnp.maximum(m_q.sum(), 1.0)
+    pp = C.pass_probs(params, cfg, x, q) * w[..., None]
+    counts = jnp.concatenate([n[None], pp.sum(axis=(0, 1))[:-1]])
+    cost = (counts * jnp.asarray(cfg.t, x.dtype)).sum() / n
+    # forwards 3 + 4: the two per-query expected-count passes of the UX
+    # penalties (penalty-routed params)
+    params_pen = dict(params,
+                      w_x=jax.lax.stop_gradient(params["w_x"]),
+                      b=jax.lax.stop_gradient(params["b"]))
+    counts_T = C.expected_counts_per_query(params_pen, cfg, x, q, mask,
+                                           m_q)[:, -1]
+    n_o = jnp.minimum(lcfg.n_o, m_q.astype(x.dtype))
+    size_pen = L.smooth_hinge(counts_T, n_o, lcfg.gamma).mean()
+    counts_pen = C.expected_counts_per_query(params_pen, cfg, x, q, mask, m_q)
+    lat = L.latency_from_counts_q(counts_pen, m_q, cfg, lcfg)
+    lat_pen = L.smooth_hinge(jnp.full_like(lat, lcfg.t_l), lat,
+                             lcfg.gamma).mean()
+    return (nll + L.l2_penalty(params, lcfg) + lcfg.beta * cost
+            + lcfg.delta * size_pen + lcfg.eps_latency * lat_pen)
+
+
+# ---------------------------------------------------------------------------
+# Variant drivers: warm one epoch (compile + upload), then time epochs on
+# the live trajectory (donated buffers flow epoch to epoch).
+# ---------------------------------------------------------------------------
+
+def _init(cfg, tcfg):
+    params = C.init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+    opt = momentum_sgd(tcfg.lr, tcfg.momentum)
+    return params, opt, opt.init(params)
+
+
+def _time_loop(log, cfg, lcfg, tcfg, loss_fn, epochs_timed):
+    params, opt, opt_state = _init(cfg, tcfg)
+    times = []
+    for epoch in range(1 + epochs_timed):
+        t0 = time.perf_counter()
+        for batch in T.batches(log, tcfg.batch_groups, tcfg.seed + epoch):
+            params, opt_state, loss = T.train_step(
+                params, opt_state, batch, cfg, lcfg, loss_fn, opt.update)
+        jax.block_until_ready(loss)
+        if epoch:                     # epoch 0 is the compile warmup
+            times.append(time.perf_counter() - t0)
+    return times
+
+
+def _time_scan(log, cfg, lcfg, tcfg, loss_fn, epochs_timed):
+    from jax.flatten_util import ravel_pytree
+
+    params, opt, _ = _init(cfg, tcfg)
+    theta, unravel = ravel_pytree(params)
+    opt_state = opt.init(theta)
+    epoch_fn = T._make_epoch_fn(cfg, lcfg, loss_fn, opt.update, None,
+                                unravel)
+    item, group = T._engine_pack(log, lcfg)
+    B = log.x.shape[0]
+    times = []
+    for epoch in range(1 + epochs_timed):
+        idx = jnp.asarray(T._epoch_perm(B, tcfg.batch_groups,
+                                        tcfg.seed + epoch))
+        t0 = time.perf_counter()
+        theta, opt_state, losses = epoch_fn(theta, opt_state, item, group,
+                                            idx)
+        jax.block_until_ready(losses)
+        if epoch:
+            times.append(time.perf_counter() - t0)
+    return times
+
+
+def run(*, smoke: bool = False) -> dict:
+    # Group size 32 — the repo's standard test-log group size (see
+    # tests/conftest.small_log). Per-epoch minima are reported: this
+    # container's wall clock is noisy and the engines are compared on
+    # their best observed epoch each.
+    n_queries = 120 if smoke else 1000
+    items_per_query = 32
+    epochs_timed = 1 if smoke else 5
+    log = generate_log(LogConfig(n_queries=n_queries,
+                                 items_per_query=items_per_query, seed=42))
+    masks = F.default_stage_masks(3)
+    cfg = C.CascadeConfig(3, F.N_FEATURES, F.N_QUERY_BUCKETS, masks,
+                          F.stage_costs(masks))
+    lcfg = L.LossConfig(beta=5.0)
+    tcfg = T.TrainConfig()            # the DEFAULT config: l3, 64 groups
+    steps, dropped = T.epoch_steps(log.x.shape[0], tcfg.batch_groups)
+
+    variants = [
+        ("loop", _time_loop, reference_loss_l3),
+        ("scan_donate", _time_scan, reference_loss_l3),
+        ("scan_fused", _time_scan, L.loss_l3),
+    ]
+    results = {}
+    for name, driver, loss_fn in variants:
+        times = driver(log, cfg, lcfg, tcfg, loss_fn, epochs_timed)
+        epoch_s = float(np.min(times))
+        results[name] = {
+            "steps_per_sec": steps / epoch_s,
+            "epoch_seconds": epoch_s,
+            "epoch_seconds_median": float(np.median(times)),
+        }
+    base = results["loop"]["steps_per_sec"]
+    for name, r in results.items():
+        r["speedup_vs_loop"] = r["steps_per_sec"] / base
+        emit(f"train/{name}", r["epoch_seconds"] * 1e6,
+             f"steps_per_sec={r['steps_per_sec']:.1f};"
+             f"speedup_vs_loop={r['speedup_vs_loop']:.2f}x")
+
+    report = {
+        "config": {"loss": tcfg.loss, "batch_groups": tcfg.batch_groups,
+                   "lr": tcfg.lr, "momentum": tcfg.momentum,
+                   "n_queries": n_queries,
+                   "items_per_query": items_per_query,
+                   "steps_per_epoch": steps, "dropped_tail_groups": dropped,
+                   "epochs_timed": epochs_timed, "smoke": smoke,
+                   "backend": jax.default_backend()},
+        "variants": results,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"train/report,, wrote {BENCH_JSON}")
+    if not smoke:
+        assert results["scan_fused"]["speedup_vs_loop"] >= 2.0, (
+            "fused single-forward scan trainer must be >= 2x the per-step "
+            f"loop in steps/sec: {results}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny log, 1 timed epoch, no speedup assertion "
+                    "(CI leg: asserts the bench runs and writes "
+                    f"{BENCH_JSON})")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

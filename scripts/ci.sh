@@ -15,3 +15,8 @@ if [[ "${SKIP_FULL:-0}" != "1" ]]; then
     echo "== full tier-1: pytest -x -q =="
     timeout "${FULL_TIMEOUT:-900}" python -m pytest -x -q
 fi
+
+echo "== train bench smoke: must run and write BENCH_train.json =="
+rm -f BENCH_train.json
+timeout "${BENCH_TIMEOUT:-300}" python -m benchmarks.train_bench --smoke
+test -s BENCH_train.json || { echo "BENCH_train.json missing"; exit 1; }

@@ -1,20 +1,44 @@
-"""CLOES objectives (paper §3.2–3.3, Eqs 4–17).
+"""CLOES objectives (paper §3.2–3.3, Eqs 4–17) — single-forward engine.
 
 All losses take the query-grouped batch layout: x (B, G, d_x), q (B, d_q),
 y/mask/price/behavior (B, G), m_q (B,). Every term is differentiable and the
 full L3 objective is a single scalar optimized by SGD (paper §3.2).
+
+Every objective derives from ONE shared cascade forward: `cascade_forward`
+computes the (B, G, T) cumulative log pass-probabilities once — through the
+same fused scorer the serving pipeline uses (kernels.ops.cascade_score, a
+custom-VJP Pallas kernel on TPU, the jitted XLA reference elsewhere) — plus
+the one stop-gradient variant L3's w_q-only penalty routing needs. NLL
+(Eq 4/17), expected cost (Eq 8), per-query counts (Eq 10) and the size and
+latency penalties (Eqs 14–16) are all cheap reductions of that tensor; the
+pre-refactor implementation re-scored the batch four times per L3 step.
+
+Engine-batch protocol: every batch term that does not depend on the params
+is a pure function of (log, lcfg), so the scan trainer precomputes it ONCE
+per fit (see trainer._engine_pack) and ships it in the batch under the
+optional keys
+
+    wgt      (B, G)  Eq-17 importance weights (from behavior/price)
+    cost_w   (B, G)  Eq-8 cost weights: mask [* (1-y)] * (M_q / N_q)
+    mn       (B,)    Eq-10 extrapolation factor M_q / N_q
+    n_o_eff  (B,)    min(N_o, M_q) result-size floor
+
+The losses use these when present and fall back to computing them from the
+raw batch (behavior/price/mask/y/m_q) otherwise — same float ops either
+way, so the two paths are value-identical.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import cascade as C
+from repro.core.pipeline import latency_from_counts
 from repro.data.synthetic import BEHAVIOR_CLICK, BEHAVIOR_PURCHASE
+from repro.kernels import ops as K
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +75,35 @@ class LossConfig:
 
 
 # ---------------------------------------------------------------------------
+# The shared forward: one fused scoring pass (+ the L3 penalty variant).
+# ---------------------------------------------------------------------------
+
+def cascade_forward(params: C.Params, cfg: C.CascadeConfig,
+                    x: jax.Array, q: jax.Array, *,
+                    penalty_variant: bool = False
+                    ) -> tuple[jax.Array, jax.Array | None]:
+    """(B, G, T) cumulative log pass-probabilities through the fused scorer.
+
+    x: (B, G, d_x), q: (B, d_q). With penalty_variant, also returns the
+    stop-gradient routing L3's UX penalties need: the same primal values,
+    but with w_x and b held constant so penalty gradients flow only into
+    the query-only weights w_q (see loss_l3). The x-side matmul dominates
+    the forward; the variant re-runs only the scorer on already-computed
+    inputs with the gradient taps moved, not a new loss formulation.
+    """
+    masks = jnp.asarray(cfg.masks, dtype=x.dtype)
+    w_eff = params["w_x"] * masks                                   # (T, d_x)
+    zq = q @ params["w_q"].T + params["b"]                          # (B, T)
+    lp = jax.vmap(lambda xb, zb: K.cascade_score(xb, w_eff, zb))(x, zq)
+    if not penalty_variant:
+        return lp, None
+    w_pen = jax.lax.stop_gradient(w_eff)
+    zq_pen = q @ params["w_q"].T + jax.lax.stop_gradient(params["b"])
+    lp_pen = jax.vmap(lambda xb, zb: K.cascade_score(xb, w_pen, zb))(x, zq_pen)
+    return lp, lp_pen
+
+
+# ---------------------------------------------------------------------------
 # Eq 17 — importance weights for multi-behavior e-commerce effectiveness.
 # ---------------------------------------------------------------------------
 
@@ -65,37 +118,43 @@ def importance_weights(behavior: jax.Array, price: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Eq 4 / Eq 17 — (weighted) log-likelihood of the product-of-sigmoids model.
+# Derivations from the shared forward. Each takes the (B, G, T) cumulative
+# log pass-probs `lp` and reduces — no re-scoring.
 # ---------------------------------------------------------------------------
 
-def weighted_nll(params: C.Params, cfg: C.CascadeConfig, lcfg: LossConfig,
-                 x, q, y, mask, behavior=None, price=None) -> jax.Array:
+def _batch_wgt(batch, lcfg: LossConfig):
+    """Eq-17 weights: precomputed engine column, or derived from the raw
+    batch; None when the batch carries no behavior signal (unweighted)."""
+    wgt = batch.get("wgt")
+    if wgt is None and batch.get("behavior") is not None:
+        wgt = importance_weights(batch["behavior"], batch["price"], lcfg)
+    return wgt
+
+
+def nll_from_lp(lp: jax.Array, y, mask, wgt=None) -> jax.Array:
     """-l(w): negative (importance-weighted) log-likelihood, Eqs 4/17.
 
-    Uses log p_i = sum_j log sigmoid(z_j) for stability; log(1 - p_i) is
-    computed via log1p(-exp(log_p)) with clamping.
+    log p_i = lp[..., -1] is already the stable log-sigmoid cumsum;
+    log(1 - p_i) is computed via log1p(-exp(log_p)) with clamping.
     """
-    log_p = C.log_pass_probs(params, cfg, x, q)[..., -1]      # (B, G)
-    log_p = jnp.minimum(log_p, -1e-7)                          # keep 1-p > 0
+    log_p = jnp.minimum(lp[..., -1], -1e-7)                    # keep 1-p > 0
     log_1mp = jnp.log1p(-jnp.exp(log_p))
     ll = y * log_p + (1.0 - y) * log_1mp
-    if behavior is not None:
-        ll = ll * importance_weights(behavior, price, lcfg)
+    if wgt is not None:
+        ll = ll * wgt
     return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
 
 
-def l2_penalty(params: C.Params, lcfg: LossConfig) -> jax.Array:
-    """alpha * ||w||_2^2 (Eq 5)."""
-    leaves = jax.tree_util.tree_leaves(params)
-    return lcfg.alpha * sum(jnp.sum(l ** 2) for l in leaves)
+def _cost_core(lp: jax.Array, cfg: C.CascadeConfig, w, n) -> jax.Array:
+    """Eq-8 reduction given ready cost weights w (B, G) and normalizer n."""
+    pp = jnp.exp(lp) * w[..., None]                            # (B, G, T)
+    counts = jnp.concatenate([n[None], pp.sum(axis=(0, 1))[:-1]])  # (T,)
+    t = jnp.asarray(cfg.t, dtype=lp.dtype)                     # (T,)
+    return (counts * t).sum() / n
 
 
-# ---------------------------------------------------------------------------
-# Eqs 6–8 — expected computational cost T(w).
-# ---------------------------------------------------------------------------
-
-def expected_cost(params: C.Params, cfg: C.CascadeConfig,
-                  x, q, mask, y=None, m_q=None) -> jax.Array:
+def cost_from_lp(lp: jax.Array, cfg: C.CascadeConfig,
+                 mask, y=None, m_q=None) -> jax.Array:
     """T(w) = sum_{j=0}^{T-1} E[Count_j] * t_{j+1}  (Eq 8), normalized per
     INDEX item so beta is scale-free across batch sizes.
 
@@ -118,10 +177,62 @@ def expected_cost(params: C.Params, cfg: C.CascadeConfig,
         n = jnp.maximum(m_q.sum(), 1.0)
     else:
         n = jnp.maximum(mask.sum(), 1.0)
-    pp = C.pass_probs(params, cfg, x, q) * w[..., None]       # (B, G, T)
-    counts = jnp.concatenate([n[None], pp.sum(axis=(0, 1))[:-1]])  # (T,)
-    t = jnp.asarray(cfg.t, dtype=x.dtype)                     # (T,)
-    return (counts * t).sum() / n
+    return _cost_core(lp, cfg, w, n)
+
+
+def counts_from_lp(lp: jax.Array, mask, m_q, mn=None) -> jax.Array:
+    """E[Count_{q,j}] ≈ (M_q / N_q) * sum_i p_pass_j  (Eq 10). Returns (B, T).
+
+    mn is the precomputed M_q / N_q engine column (see module docstring)."""
+    pp = jnp.exp(lp) * mask[..., None]                         # (B, G, T)
+    if mn is None:
+        mn = m_q / jnp.maximum(mask.sum(axis=-1), 1.0)         # (B,)
+    return mn[..., None] * pp.sum(axis=-2)
+
+
+def latency_from_counts_q(counts: jax.Array, m_q, cfg: C.CascadeConfig,
+                          lcfg: LossConfig) -> jax.Array:
+    """E[Latency_{q,T}] = sum_j t_j * E[Count_{q,·}]  (Eq 16). Returns (B,).
+
+    Shares core.pipeline.latency_from_counts with the serving pipeline —
+    training and serving estimate latency from counts with the same code.
+    """
+    return latency_from_counts(counts, m_q, cfg, lcfg.latency_scale,
+                               lcfg.latency_convention)
+
+
+# ---------------------------------------------------------------------------
+# Standalone term APIs (evaluation / benchmarks). Each runs ONE forward and
+# derives — same signatures and values as the pre-refactor implementations.
+# ---------------------------------------------------------------------------
+
+def weighted_nll(params: C.Params, cfg: C.CascadeConfig, lcfg: LossConfig,
+                 x, q, y, mask, behavior=None, price=None) -> jax.Array:
+    """-l(w): negative (importance-weighted) log-likelihood, Eqs 4/17."""
+    lp, _ = cascade_forward(params, cfg, x, q)
+    wgt = (importance_weights(behavior, price, lcfg)
+           if behavior is not None else None)
+    return nll_from_lp(lp, y, mask, wgt)
+
+
+def l2_penalty(params: C.Params, lcfg: LossConfig) -> jax.Array:
+    """alpha * ||w||_2^2 (Eq 5)."""
+    leaves = jax.tree_util.tree_leaves(params)
+    return lcfg.alpha * sum(jnp.sum(l ** 2) for l in leaves)
+
+
+def expected_cost(params: C.Params, cfg: C.CascadeConfig,
+                  x, q, mask, y=None, m_q=None) -> jax.Array:
+    """T(w) (Eq 8) from a fresh forward — see cost_from_lp for the math."""
+    lp, _ = cascade_forward(params, cfg, x, q)
+    return cost_from_lp(lp, cfg, mask, y, m_q)
+
+
+def expected_latency_per_query(params: C.Params, cfg: C.CascadeConfig,
+                               lcfg: LossConfig, x, q, mask, m_q) -> jax.Array:
+    """E[Latency_{q,T}] (Eq 16) from a fresh forward. Returns (B,)."""
+    lp, _ = cascade_forward(params, cfg, x, q)
+    return latency_from_counts_q(counts_from_lp(lp, mask, m_q), m_q, cfg, lcfg)
 
 
 # ---------------------------------------------------------------------------
@@ -134,39 +245,34 @@ def smooth_hinge(z: jax.Array, target: jax.Array, gamma: float) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Eq 10 / Eq 16 — per-query expected counts and latency.
+# Full objectives L1 (Eq 5), L2 (Eq 9), L3 (Eq 15) — one forward each.
 # ---------------------------------------------------------------------------
 
-def expected_latency_per_query(params: C.Params, cfg: C.CascadeConfig,
-                               lcfg: LossConfig, x, q, mask, m_q) -> jax.Array:
-    """E[Latency_{q,T}] = sum_j t_j * E[Count_{q,·}]  (Eq 16). Returns (B,)."""
-    counts = C.expected_counts_per_query(params, cfg, x, q, mask, m_q)  # (B, T)
-    t = jnp.asarray(cfg.t, dtype=x.dtype)
-    if lcfg.latency_convention == "entering":
-        entering = jnp.concatenate(
-            [m_q[:, None].astype(x.dtype), counts[:, :-1]], axis=-1)
-        lat = (entering * t).sum(-1)
-    else:  # as printed in the paper
-        lat = (counts * t).sum(-1)
-    return lcfg.latency_scale * lat
+def _l2_from_lp(params, lp, cfg: C.CascadeConfig, lcfg: LossConfig,
+                batch) -> jax.Array:
+    """L2 (Eq 9) given the shared forward's lp."""
+    nll = nll_from_lp(lp, batch["y"], batch["mask"], _batch_wgt(batch, lcfg))
+    cost_w = batch.get("cost_w")
+    if cost_w is not None:                 # engine batch: weights precomputed
+        cost = _cost_core(lp, cfg, cost_w,
+                          jnp.maximum(batch["m_q"].sum(), 1.0))
+    else:
+        y_for_cost = batch["y"] if lcfg.cost_mask_positives else None
+        cost = cost_from_lp(lp, cfg, batch["mask"], y_for_cost,
+                            batch.get("m_q"))
+    return nll + l2_penalty(params, lcfg) + lcfg.beta * cost
 
-
-# ---------------------------------------------------------------------------
-# Full objectives L1 (Eq 5), L2 (Eq 9), L3 (Eq 15).
-# ---------------------------------------------------------------------------
 
 def loss_l1(params, cfg: C.CascadeConfig, lcfg: LossConfig, batch) -> jax.Array:
-    return (weighted_nll(params, cfg, lcfg, batch["x"], batch["q"], batch["y"],
-                         batch["mask"], batch.get("behavior"), batch.get("price"))
+    lp, _ = cascade_forward(params, cfg, batch["x"], batch["q"])
+    return (nll_from_lp(lp, batch["y"], batch["mask"],
+                        _batch_wgt(batch, lcfg))
             + l2_penalty(params, lcfg))
 
 
 def loss_l2(params, cfg: C.CascadeConfig, lcfg: LossConfig, batch) -> jax.Array:
-    y_for_cost = batch["y"] if lcfg.cost_mask_positives else None
-    return (loss_l1(params, cfg, lcfg, batch)
-            + lcfg.beta * expected_cost(params, cfg, batch["x"], batch["q"],
-                                        batch["mask"], y_for_cost,
-                                        batch.get("m_q")))
+    lp, _ = cascade_forward(params, cfg, batch["x"], batch["q"])
+    return _l2_from_lp(params, lp, cfg, lcfg, batch)
 
 
 def loss_l3(params, cfg: C.CascadeConfig, lcfg: LossConfig, batch) -> jax.Array:
@@ -180,25 +286,27 @@ def loss_l3(params, cfg: C.CascadeConfig, lcfg: LossConfig, batch) -> jax.Array:
     global bias b, which the cost term then fights via w_x) saturates
     tail-query probabilities and inverts within-query ordering — so w_x and b
     are stop-gradient'd inside the penalty terms: per-query size/latency
-    control lives entirely in the per-recall-bucket weights w_q.
+    control lives entirely in the per-recall-bucket weights w_q. Both
+    penalties reduce the SAME penalty-variant forward (lp_pen): the
+    pre-refactor code ran two extra expected_counts_per_query passes here.
     """
     x, q, mask, m_q = batch["x"], batch["q"], batch["mask"], batch["m_q"]
-    params_pen = dict(params,
-                      w_x=jax.lax.stop_gradient(params["w_x"]),
-                      b=jax.lax.stop_gradient(params["b"]))
-    counts_T = C.expected_counts_per_query(params_pen, cfg, x, q, mask, m_q)[:, -1]
+    lp, lp_pen = cascade_forward(params, cfg, x, q, penalty_variant=True)
+    counts_pen = counts_from_lp(lp_pen, mask, m_q, batch.get("mn"))  # (B, T)
     # result-size floor: penalize E[Count_{q,T}] < N_o — but never ask for more
     # results than the query recalls (tail queries with M_q < N_o are exempt
     # up to their recall size). Eq 11 introduces one slack xi_i per *instance*,
     # so the penalty is (with equal-size query groups) a mean over queries;
     # the penalty unit is "missing results" — normalized by N_o so delta is
     # scale-free against the per-instance NLL.
-    n_o = jnp.minimum(lcfg.n_o, m_q.astype(x.dtype))
-    size_pen = smooth_hinge(counts_T, n_o, lcfg.gamma).mean()
-    lat = expected_latency_per_query(params_pen, cfg, lcfg, x, q, mask, m_q)
+    n_o = batch.get("n_o_eff")
+    if n_o is None:
+        n_o = jnp.minimum(lcfg.n_o, m_q.astype(x.dtype))
+    size_pen = smooth_hinge(counts_pen[:, -1], n_o, lcfg.gamma).mean()
+    lat = latency_from_counts_q(counts_pen, m_q, cfg, lcfg)
     # latency cap: g'(T_l, Latency) penalizes Latency > T_l (unit: excess ms)
     lat_pen = smooth_hinge(jnp.full_like(lat, lcfg.t_l), lat, lcfg.gamma).mean()
-    return (loss_l2(params, cfg, lcfg, batch)
+    return (_l2_from_lp(params, lp, cfg, lcfg, batch)
             + lcfg.delta * size_pen + lcfg.eps_latency * lat_pen)
 
 

@@ -1,7 +1,23 @@
 """SGD trainer for the CLOES cascade (paper §3.2: minibatch SGD, params
 initialized near zero). Batches are query groups so the per-query reductions
-of Eqs 10/16 are local sums. A data-parallel pjit path is in launch/train.py;
-this module is the single-host loop used by the offline experiments."""
+of Eqs 10/16 are local sums.
+
+Two engines behind the same `fit()` API:
+
+  * ``engine="scan"`` (default) — the fused training engine: the log is
+    packed and uploaded to the device ONCE (with the param-independent
+    loss terms precomputed — see `_engine_pack`), each epoch permutes it
+    on device and runs as one `jax.lax.scan` whose donated carry is the
+    raveled (params, momentum) pair. Minibatch order comes from the same
+    host-side RNG permutations as the loop engine, so the loss trajectory
+    is reproduced step for step (to f32 re-association noise).
+    With a `mesh`, the per-step minibatch is sharded over the mesh's data
+    axis via shard_map (batch shard + gradient mean; single-device meshes
+    degenerate to the plain scan).
+  * ``engine="loop"`` — the original per-step Python loop (one jitted step
+    per minibatch, seven host->device uploads each). Kept as the benchmark
+    baseline and the trajectory-parity oracle.
+"""
 
 from __future__ import annotations
 
@@ -12,6 +28,9 @@ from typing import Callable, Iterator
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.flatten_util import ravel_pytree
+from jax.sharding import Mesh, PartitionSpec as PS
 
 from repro.core import cascade as C
 from repro.core import losses as L
@@ -28,14 +47,54 @@ class TrainConfig:
     epochs: int = 10
     seed: int = 0
     log_every: int = 200
+    engine: str = "scan"       # scan | loop (see module docstring)
+
+
+def epoch_steps(n_groups: int, batch_groups: int) -> tuple[int, int]:
+    """(full minibatches per epoch, query groups DROPPED from the tail).
+
+    The tail partial batch is dropped deliberately: every step of the
+    epoch scan (and every jitted loop step) then sees the same
+    (batch_groups, G) shapes — no recompiles, no masked partial step.
+    With the default 64 groups that is < 64 of B groups per epoch, and a
+    fresh permutation each epoch means no group is systematically lost.
+    """
+    steps = n_groups // batch_groups
+    return steps, n_groups - steps * batch_groups
+
+
+def _epoch_perm(n_groups: int, batch_groups: int, seed: int) -> np.ndarray:
+    """Host-side minibatch index plan for one epoch: (steps, batch_groups).
+
+    The SAME RNG stream as `batches()` — the scan engine consumes these
+    indices on device, so both engines visit identical minibatches.
+    """
+    steps, _ = epoch_steps(n_groups, batch_groups)
+    perm = np.random.default_rng(seed).permutation(n_groups)
+    return perm[:steps * batch_groups].reshape(steps, batch_groups)
+
+
+def _log_arrays(log: SearchLog) -> dict[str, jax.Array]:
+    """The full log as device arrays — uploaded once per fit()."""
+    return {
+        "x": jnp.asarray(log.x, jnp.float32),
+        "q": jnp.asarray(log.q, jnp.float32),
+        "y": jnp.asarray(log.y, jnp.float32),
+        "mask": jnp.asarray(log.mask, jnp.float32),
+        "behavior": jnp.asarray(log.behavior),
+        "price": jnp.asarray(log.price, jnp.float32),
+        "m_q": jnp.asarray(log.m_q, jnp.float32),
+    }
 
 
 def batches(log: SearchLog, batch_groups: int, seed: int) -> Iterator[dict]:
-    rng = np.random.default_rng(seed)
-    B = log.x.shape[0]
-    perm = rng.permutation(B)
-    for s in range(0, B - batch_groups + 1, batch_groups):
-        idx = perm[s:s + batch_groups]
+    """Host-side minibatch iterator (the loop engine's data path).
+
+    NOTE: the tail partial batch is dropped — see `epoch_steps`, which
+    also reports how many groups that discards per epoch.
+    """
+    idx_plan = _epoch_perm(log.x.shape[0], batch_groups, seed)
+    for idx in idx_plan:
         yield {
             "x": jnp.asarray(log.x[idx], jnp.float32),
             "q": jnp.asarray(log.q[idx], jnp.float32),
@@ -47,49 +106,207 @@ def batches(log: SearchLog, batch_groups: int, seed: int) -> Iterator[dict]:
         }
 
 
+def _resolve_loss(loss_name) -> Callable:
+    return L.LOSSES[loss_name] if isinstance(loss_name, str) else loss_name
+
+
 @partial(jax.jit, static_argnames=("cfg", "lcfg", "loss_name", "opt_update"))
 def train_step(params, opt_state, batch, cfg: C.CascadeConfig,
-               lcfg: L.LossConfig, loss_name: str, opt_update):
-    loss_fn = L.LOSSES[loss_name]
+               lcfg: L.LossConfig, loss_name, opt_update):
+    loss_fn = _resolve_loss(loss_name)
     loss, grads = jax.value_and_grad(loss_fn)(params, cfg, lcfg, batch)
     updates, opt_state = opt_update(grads, opt_state, params)
     return apply_updates(params, updates), opt_state, loss
 
 
+# ---------------------------------------------------------------------------
+# Scan engine: one XLA computation per epoch, device-resident data, donated
+# parameter/optimizer buffers. Optionally shard_map'd over a data mesh.
+#
+# The per-step graph is kept minimal: everything in the objective that does
+# not depend on the params — importance weights, Eq-8 cost weights, Eq-10
+# extrapolation factors, the result-size floor — is a pure function of
+# (log, lcfg) and is precomputed ONCE per fit (`_engine_pack`, the
+# engine-batch protocol in core.losses). The packed log is TWO arrays
+# (item-level and group-level), so each epoch permutes with two gathers and
+# the scan slices two xs, not seven. Params and momentum ride the scan
+# carry as single raveled vectors (one optimizer kernel instead of one per
+# leaf); the update math is element-wise identical, so trajectories match
+# the loop engine bit for bit.
+# ---------------------------------------------------------------------------
+
+def _engine_pack(log: SearchLog,
+                 lcfg: L.LossConfig) -> tuple[jax.Array, jax.Array]:
+    """Upload the log once, with param-independent loss terms precomputed.
+
+    Returns (item (B, G, d_x+4), group (B, d_q+3)):
+      item  = [x | y | mask | wgt | cost_w]
+      group = [q | m_q | mn | n_o_eff]
+    """
+    d = _log_arrays(log)
+    wgt = L.importance_weights(d["behavior"], d["price"], lcfg)
+    n_q = jnp.maximum(d["mask"].sum(-1), 1.0)
+    mn = d["m_q"] / n_q
+    base_w = (d["mask"] * (1.0 - d["y"]) if lcfg.cost_mask_positives
+              else d["mask"])
+    cost_w = base_w * mn[:, None]
+    n_o_eff = jnp.minimum(lcfg.n_o, d["m_q"])
+    item = jnp.concatenate(
+        [d["x"], d["y"][..., None], d["mask"][..., None],
+         wgt[..., None], cost_w[..., None]], axis=-1)
+    group = jnp.concatenate(
+        [d["q"], d["m_q"][:, None], mn[:, None], n_o_eff[:, None]], axis=-1)
+    return item, group
+
+
+def _engine_unpack(item: jax.Array, group: jax.Array,
+                   d_x: int, d_q: int) -> dict[str, jax.Array]:
+    """Packed minibatch -> the engine-batch dict the losses consume."""
+    return {
+        "x": item[..., :d_x], "y": item[..., d_x],
+        "mask": item[..., d_x + 1], "wgt": item[..., d_x + 2],
+        "cost_w": item[..., d_x + 3],
+        "q": group[..., :d_q], "m_q": group[..., d_q],
+        "mn": group[..., d_q + 1], "n_o_eff": group[..., d_q + 2],
+    }
+
+
+def _make_epoch_fn(cfg: C.CascadeConfig, lcfg: L.LossConfig, loss_fn,
+                   opt_update, mesh: Mesh | None, unravel):
+    """Build the jitted epoch function:
+    (theta, opt_state, item, group, idx (steps, batch_groups)) ->
+    (theta, opt_state, losses (steps,)). theta is the raveled param vector
+    (unravel maps it back to the param dict for the loss)."""
+
+    def epoch(theta, opt_state, item, group, idx):
+        steps, bg = idx.shape
+        # Permute ON DEVICE, once per epoch: one gather per packed array,
+        # reshaped to (steps, batch_groups, ...) and consumed as the
+        # scan's xs — each step reads its minibatch by dynamic slice.
+        # Costs one transient copy of the log.
+        flat = idx.reshape(-1)
+        xs = (item[flat].reshape(steps, bg, *item.shape[1:]),
+              group[flat].reshape(steps, bg, *group.shape[1:]))
+
+        def step(carry, mb):
+            theta, opt_state = carry
+            batch = _engine_unpack(mb[0], mb[1], cfg.d_x, cfg.d_q)
+            loss, grads = jax.value_and_grad(
+                lambda th: loss_fn(unravel(th), cfg, lcfg, batch))(theta)
+            if mesh is not None:
+                # data parallelism: each shard computed its loss on its
+                # slice of the minibatch groups; average grads (and the
+                # reported loss) across shards before the (replicated)
+                # update.
+                grads = jax.lax.pmean(grads, "data")
+                loss = jax.lax.pmean(loss, "data")
+            updates, opt_state = opt_update(grads, opt_state, theta)
+            return (apply_updates(theta, updates), opt_state), loss
+
+        (theta, opt_state), losses = jax.lax.scan(
+            step, (theta, opt_state), xs)
+        return theta, opt_state, losses
+
+    if mesh is None:
+        return jax.jit(epoch, donate_argnums=(0, 1))
+
+    sharded = shard_map(
+        epoch, mesh=mesh,
+        # theta/opt_state replicated, the packed log replicated, the
+        # per-step minibatch group axis sharded over the data axis.
+        in_specs=(PS(), PS(), PS(), PS(), PS(None, "data")),
+        out_specs=(PS(), PS(), PS()),
+        check_rep=False)       # pmean'd grads make the outputs replicated
+    return jax.jit(sharded, donate_argnums=(0, 1))
+
+
 def fit(log: SearchLog, cfg: C.CascadeConfig, lcfg: L.LossConfig,
         tcfg: TrainConfig | None = None,
-        callback: Callable[[int, float], None] | None = None) -> C.Params:
+        callback: Callable[[int, float], None] | None = None,
+        *, loss_fn: Callable | None = None,
+        mesh: Mesh | None = None) -> C.Params:
+    """Train CLOES params on the log. See module docstring for the engines.
+
+    loss_fn overrides the objective looked up from tcfg.loss (used by the
+    training benchmark to pin a reference implementation). mesh enables
+    the shard_map data-parallel path (scan engine only): tcfg.batch_groups
+    must divide by the mesh's data-axis size.
+
+    Data-parallel semantics (the standard approximation): each shard
+    normalizes its loss over ITS slice of the minibatch (mask.sum(),
+    m_q.sum() are per-shard) and gradients are pmean'd — grad of the mean
+    of per-shard losses, not grad of the global-batch loss. With >1
+    device the trajectory therefore deviates from single-device training
+    when shards carry unequal valid-item mass; a 1-device mesh is exact.
+    """
     tcfg = tcfg or TrainConfig()
     key = jax.random.PRNGKey(tcfg.seed)
     params = C.init_params(cfg, key)
     opt = momentum_sgd(tcfg.lr, tcfg.momentum)
     opt_state = opt.init(params)
-    step = 0
+    loss_fn = loss_fn or L.LOSSES[tcfg.loss]
+
+    if tcfg.engine == "loop":
+        assert mesh is None, "the loop engine has no data-parallel path"
+        step = 0
+        for epoch in range(tcfg.epochs):
+            for batch in batches(log, tcfg.batch_groups, tcfg.seed + epoch):
+                params, opt_state, loss = train_step(
+                    params, opt_state, batch, cfg, lcfg, loss_fn, opt.update)
+                if callback and step % tcfg.log_every == 0:
+                    callback(step, float(loss))
+                step += 1
+        return params
+    if tcfg.engine != "scan":
+        raise ValueError(f"unknown trainer engine: {tcfg.engine!r}")
+
+    if mesh is not None:
+        n_data = mesh.shape["data"]
+        if tcfg.batch_groups % n_data:
+            raise ValueError(f"batch_groups={tcfg.batch_groups} must divide "
+                             f"by the data-axis size {n_data}")
+    B = log.x.shape[0]
+    steps_per_epoch, _ = epoch_steps(B, tcfg.batch_groups)
+    if steps_per_epoch == 0:
+        return params
+    item, group = _engine_pack(log, lcfg)           # ONE upload per fit
+    theta, unravel = ravel_pytree(params)
+    opt_state = opt.init(theta)                     # momentum on the ravel
+    epoch_fn = _make_epoch_fn(cfg, lcfg, loss_fn, opt.update, mesh, unravel)
     for epoch in range(tcfg.epochs):
-        for batch in batches(log, tcfg.batch_groups, tcfg.seed + epoch):
-            params, opt_state, loss = train_step(
-                params, opt_state, batch, cfg, lcfg, tcfg.loss, opt.update)
-            if callback and step % tcfg.log_every == 0:
-                callback(step, float(loss))
-            step += 1
-    return params
+        idx = jnp.asarray(
+            _epoch_perm(B, tcfg.batch_groups, tcfg.seed + epoch))
+        theta, opt_state, losses = epoch_fn(theta, opt_state, item, group,
+                                            idx)
+        if callback:
+            base = epoch * steps_per_epoch
+            for i in range(steps_per_epoch):
+                if (base + i) % tcfg.log_every == 0:
+                    callback(base + i, float(losses[i]))
+    return unravel(theta)
 
 
 def evaluate(params: C.Params, cfg: C.CascadeConfig, log: SearchLog,
              lcfg: L.LossConfig | None = None) -> dict[str, float]:
     """Offline metrics: AUC of the final score + expected cost per instance
-    (Eq 8) + expected per-query latency (Eq 16) + final result size."""
+    (Eq 8) + expected per-query latency (Eq 16) + final result size.
+
+    ONE cascade forward: scores, cost, counts and latency are all derived
+    from the same (B, G, T) log pass-probabilities (the pre-refactor
+    version re-scored the log four times).
+    """
     from repro.core import metrics as M
     lcfg = lcfg or L.LossConfig()
     x = jnp.asarray(log.x, jnp.float32)
     q = jnp.asarray(log.q, jnp.float32)
     mask = jnp.asarray(log.mask, jnp.float32)
     m_q = jnp.asarray(log.m_q, jnp.float32)
-    scores = np.asarray(C.final_score(params, cfg, x, q))
-    cost = float(L.expected_cost(params, cfg, x, q, mask, m_q=m_q))
-    lat = np.asarray(L.expected_latency_per_query(params, cfg, lcfg, x, q, mask, m_q))
-    counts_T = np.asarray(
-        C.expected_counts_per_query(params, cfg, x, q, mask, m_q))[:, -1]
+    lp, _ = L.cascade_forward(params, cfg, x, q)
+    scores = np.asarray(lp[..., -1])
+    cost = float(L.cost_from_lp(lp, cfg, mask, m_q=m_q))
+    counts = L.counts_from_lp(lp, mask, m_q)                    # (B, T)
+    lat = np.asarray(L.latency_from_counts_q(counts, m_q, cfg, lcfg))
+    counts_T = np.asarray(counts)[:, -1]
     return {
         "auc": M.group_auc(scores, log.y, log.mask),
         "pooled_auc": M.auc(scores, log.y, log.mask),

@@ -75,6 +75,99 @@ def cascade_score(x: jax.Array, w_eff: jax.Array, zq: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Backward kernel (training): grads of the cumulative log pass-probs w.r.t.
+# x, w_eff and zq in one pass over the items.
+#
+# With out[i, j] = sum_{k<=j} log sigmoid(logit[i, k]) and cotangent g:
+#
+#     g_logit[i, k] = (sum_{j>=k} g[i, j]) * sigmoid(-logit[i, k])
+#     dx     = g_logit @ w_eff          (N, d)
+#     dw_eff = g_logit^T @ x            (T, d)
+#     dzq    = sum_i g_logit[i, :]      (T,)
+#
+# The reverse cumsum is computed as total - cumsum + g (no lane-axis flip).
+# Like the forward, each grid step streams one item block through VMEM and
+# recomputes its logits — no (N, T) residual ever hits HBM. dw/dzq are
+# accumulated across the (sequential) TPU grid in their output blocks.
+# ---------------------------------------------------------------------------
+
+
+def _bwd_kernel(x_ref, w_ref, zq_ref, g_ref, dx_ref, dw_ref, dzq_ref):
+    """x: (BN, d_pad), w: (T_pad, d_pad), zq: (1, T_pad), g: (BN, T_pad)."""
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    zq = zq_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) + zq            # (BN, T_pad)
+    # reverse cumsum over stages: gc[:, k] = sum_{j>=k} g[:, j]
+    gc = g.sum(axis=-1, keepdims=True) - jnp.cumsum(g, axis=-1) + g
+    g_logit = gc * jax.nn.sigmoid(-logits)                  # (BN, T_pad)
+    dx_ref[...] = jax.lax.dot_general(
+        g_logit, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (BN, d_pad)
+    dw_blk = jax.lax.dot_general(
+        g_logit, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (T_pad, d_pad)
+    dzq_blk = g_logit.sum(axis=0, keepdims=True)            # (1, T_pad)
+
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[...] = dw_blk
+        dzq_ref[...] = dzq_blk
+
+    @pl.when(i > 0)
+    def _accum():
+        dw_ref[...] += dw_blk
+        dzq_ref[...] += dzq_blk
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cascade_score_bwd(x: jax.Array, w_eff: jax.Array, zq: jax.Array,
+                      g: jax.Array, *, interpret: bool = False
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Backward of `cascade_score`: cotangent g (N, T) -> (dx, dw_eff, dzq).
+
+    Same padding scheme as the forward; padded rows/stages carry zero
+    cotangent so they contribute nothing to the accumulated grads.
+    """
+    n, d = x.shape
+    t = w_eff.shape[0]
+    assert t <= MAX_STAGES, f"cascade of {t} stages > {MAX_STAGES}"
+    n_pad = (-n) % BLOCK_ITEMS
+    d_pad = (-d) % LANE
+    xp = jnp.pad(x, ((0, n_pad), (0, d_pad)))
+    wp = jnp.pad(w_eff, ((0, MAX_STAGES - t), (0, d_pad)))
+    zqp = jnp.pad(zq, (0, MAX_STAGES - t)).reshape(1, MAX_STAGES)
+    gp = jnp.pad(g.astype(jnp.float32), ((0, n_pad), (0, MAX_STAGES - t)))
+    grid = (xp.shape[0] // BLOCK_ITEMS,)
+    dx, dw, dzq = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ITEMS, xp.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((MAX_STAGES, xp.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((1, MAX_STAGES), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_ITEMS, MAX_STAGES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_ITEMS, xp.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((MAX_STAGES, xp.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((1, MAX_STAGES), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0], xp.shape[1]), jnp.float32),
+            jax.ShapeDtypeStruct((MAX_STAGES, xp.shape[1]), jnp.float32),
+            jax.ShapeDtypeStruct((1, MAX_STAGES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wp, zqp, gp)
+    return dx[:n, :d], dw[:t, :d], dzq[0, :t]
+
+
+# ---------------------------------------------------------------------------
 # Feature-major variant (§Perf kernel iteration): the item-major layout pads
 # the d_x features (24 for the paper's registry) up to the 128-lane width —
 # a 5.3x read amplification that erases the fusion win. Storing the

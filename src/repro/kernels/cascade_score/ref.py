@@ -23,3 +23,21 @@ def cascade_score_ref(x: jax.Array, w_eff: jax.Array,
     logits = (x.astype(jnp.float32) @ w_eff.astype(jnp.float32).T
               + zq.astype(jnp.float32))
     return jnp.cumsum(jax.nn.log_sigmoid(logits), axis=-1)
+
+
+def cascade_score_bwd_ref(x: jax.Array, w_eff: jax.Array, zq: jax.Array,
+                          g: jax.Array) -> tuple[jax.Array, jax.Array,
+                                                 jax.Array]:
+    """Closed-form backward of `cascade_score_ref` — the XLA oracle the
+    Pallas backward kernel mirrors (see kernel.py for the derivation).
+
+    g: (N, T) cotangent of the cumulative log pass-probs.
+    Returns (dx (N, d), dw_eff (T, d), dzq (T,)), all f32.
+    """
+    xf = x.astype(jnp.float32)
+    wf = w_eff.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    logits = xf @ wf.T + zq.astype(jnp.float32)
+    gc = gf.sum(axis=-1, keepdims=True) - jnp.cumsum(gf, axis=-1) + gf
+    g_logit = gc * jax.nn.sigmoid(-logits)                 # (N, T)
+    return g_logit @ wf, g_logit.T @ xf, g_logit.sum(axis=0)

@@ -19,6 +19,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def data_parallel_mesh(batch_groups: int):
+    """1-D ("data",) mesh over the available devices for CLOES training.
+
+    Uses the largest device count that divides batch_groups (shard_map
+    requires exact divisibility of the minibatch group axis); returns None
+    on a single device — the trainer then takes its plain scan path.
+    """
+    n = len(jax.devices())
+    while n > 1 and batch_groups % n:
+        n -= 1
+    if n <= 1:
+        return None
+    return jax.make_mesh((n,), ("data",))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes carrying batch parallelism."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,11 +1,13 @@
 """Training launcher.
 
 Two paths:
-  * `--target cloes`  — train the paper's cascade on the synthetic log with
-    data-parallel pjit over whatever mesh is available (1 CPU device here;
-    (pod, data) axes on the production mesh). The loss's per-query
-    reductions are group-local, so data parallelism is a pure batch shard +
-    gradient all-reduce.
+  * `--target cloes`  — train the paper's cascade on the synthetic log,
+    data-parallel via shard_map over whatever mesh is available (a 1-D
+    ("data",) mesh of the local devices; clean fallback to the plain scan
+    engine on one device). The loss's per-query reductions are
+    group-local, so data parallelism is a batch shard + gradient mean —
+    per-shard loss normalization, the standard approximation (see
+    core.trainer.fit for the exact semantics).
   * `--target lm --arch <id>` — train a (reduced) assigned architecture as
     the neural final-stage ranker substrate.
 
@@ -33,17 +35,22 @@ from repro.data import LogConfig, generate_log
 
 
 def train_cloes(args) -> None:
+    from repro.launch.mesh import data_parallel_mesh
+
     log = generate_log(LogConfig(n_queries=args.queries, seed=args.seed))
     tr, te = log.split(0.8)
     lcfg = L.LossConfig(beta=args.beta)
     devices = jax.devices()
-    print(f"[train] CLOES on {len(devices)} device(s), "
-          f"{tr.n_instances} instances")
+    mesh = data_parallel_mesh(args.batch_groups)
+    shards = mesh.shape["data"] if mesh is not None else 1
+    print(f"[train] CLOES on {len(devices)} device(s) "
+          f"({shards}-way data parallel), {tr.n_instances} instances")
     t0 = time.time()
     params, cfg = B.fit_cloes(
         tr, lcfg=lcfg,
         tcfg=T.TrainConfig(loss="l3", epochs=args.epochs, lr=args.lr,
-                           batch_groups=args.batch_groups))
+                           batch_groups=args.batch_groups),
+        mesh=mesh)
     print(f"[train] done in {time.time()-t0:.1f}s")
     for split, data in [("train", tr), ("test", te)]:
         m = T.evaluate(params, cfg, data, lcfg)

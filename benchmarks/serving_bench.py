@@ -1,5 +1,5 @@
 """Serving-path throughput: items/sec through the hard cascade for the
-three serving implementations, over the batcher's shape buckets.
+serving implementations, over the batcher's shape buckets.
 
   unfused-xla         — the pre-pipeline serving path, reproduced here as
                         the baseline: separate XLA scoring, a SECOND
@@ -8,17 +8,30 @@ three serving implementations, over the batcher's shape buckets.
                         for the Eq-16 latency estimate, all dispatched
                         eagerly (this is what CascadeServer.rank_batch did
                         before core/pipeline.py existed).
-  fused-score         — the jitted pipeline with the fused scorer and the
-                        XLA stage chain.
+  fused-score-vmap    — the PR-2 fused="score" pipeline, reproduced here
+                        as the vmap baseline: jax.vmap of the SINGLE-GROUP
+                        scorer op over the batch (grid restructured through
+                        the batching rule), XLA stage chain.
+  batched-kernel      — the shipped fused="score" pipeline: the native
+                        batched (B, G) scorer entry point (one 2-D
+                        (batch, item-block) grid, zero vmap wrapping of
+                        the kernel) + the XLA stage chain.
   fused-score+filter  — the jitted pipeline around the fused score+filter
                         kernel: one scoring pass, no argsorts, latency
                         from the pipeline's own counts (ops backend
                         dispatch: Pallas on TPU, jitted XLA reference
                         elsewhere).
+
+Writes BENCH_serving.json (gitignored — machine-local numbers). --smoke
+(the CI leg) times one small bucket on untrained params and skips the
+throughput assertions — it only proves the bench runs and writes the
+report.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 from functools import partial
 
 import jax
@@ -29,9 +42,12 @@ from benchmarks.common import emit, time_call, trained_cloes
 from repro.core import cascade as C
 from repro.core import losses as L
 from repro.core import pipeline as P
+from repro.data import features as F
+from repro.kernels import ops as K
 from repro.serving.cascade_server import CascadeServer
 
 BUCKETS = [(32, 64), (32, 256)]
+BENCH_JSON = "BENCH_serving.json"
 
 
 def _batch(b, g, d_x, d_q, seed=0):
@@ -66,33 +82,67 @@ def _seed_rank_batch(params, cfg, lcfg, batch):
     return scores, surv, lat
 
 
-def run():
-    params, cfg, lcfg = trained_cloes()
-    srv = CascadeServer(params, cfg, lcfg, use_fused_kernel=True)
-    srv.warmup()
+def _vmap_score_pipeline(cfg, lcfg):
+    """The PR-2 fused="score" pipeline body: vmap of the single-group
+    scorer op, then the shared keep-count / stage-chain / latency tail."""
+    @jax.jit
+    def pipeline(p, x, q, mask, m_q):
+        w_eff = p["w_x"] * jnp.asarray(cfg.masks, jnp.float32)
+        zq = q @ p["w_q"].T + p["b"]
+        lp = jax.vmap(
+            lambda xb, zqb: K.cascade_score(xb, w_eff, zqb))(x, zq)
+        counts, n_keep = P.keep_counts_from_lp(lp, mask, m_q)
+        surv = P.filter_chain(lp, mask, n_keep)
+        lat = P.latency_from_counts(counts, m_q, cfg, lcfg.latency_scale,
+                                    lcfg.latency_convention)
+        return lp[..., -1], surv[..., -1], lat
+    return pipeline
+
+
+def run(*, smoke: bool = False):
+    if smoke:
+        # untrained params: throughput does not depend on weight values,
+        # and the smoke leg must not pay a multi-epoch training warmup
+        masks = F.default_stage_masks(3)
+        cfg = C.CascadeConfig(3, F.N_FEATURES, F.N_QUERY_BUCKETS, masks,
+                              F.stage_costs(masks))
+        params = C.init_params(cfg, jax.random.PRNGKey(0), scale=0.3)
+        lcfg = L.LossConfig(beta=5.0)
+        buckets, iters = [(8, 64)], 3
+    else:
+        params, cfg, lcfg = trained_cloes()
+        buckets, iters = BUCKETS, 10
+    # no srv.warmup(): time_call's own warmup compiles the one shape each
+    # variant uses — warming all 18 batcher buckets would only add wall time
+    srv = CascadeServer(params, cfg, lcfg, fused="filter")
 
     @partial(jax.jit, static_argnames=())
-    def fused_score_pipeline(p, x, q, mask, m_q):
+    def batched_kernel_pipeline(p, x, q, mask, m_q):
         out = P.run_cascade(p, cfg, x, q, mask, m_q, fused="score")
         lat = P.latency_from_counts(out["expected_counts"], m_q, cfg,
                                     lcfg.latency_scale,
                                     lcfg.latency_convention)
         return out["scores"], out["survivors"][..., -1], lat
 
+    vmap_pipeline = _vmap_score_pipeline(cfg, lcfg)
+
     results = {}
-    for b, g in BUCKETS:
+    for b, g in buckets:
         batch = _batch(b, g, cfg.d_x, cfg.d_q)
         jb = {k: jnp.asarray(v) for k, v in batch.items()}
         items = b * g
+        args = (params, jb["x"], jb["q"], jb["mask"], jb["m_q"])
 
         us_unfused = time_call(
-            lambda: _seed_rank_batch(params, cfg, lcfg, batch))
-        us_score = time_call(
-            lambda: fused_score_pipeline(params, jb["x"], jb["q"],
-                                         jb["mask"], jb["m_q"]))
-        us_filter = time_call(lambda: srv.rank_batch(batch)["scores"])
+            lambda: _seed_rank_batch(params, cfg, lcfg, batch), iters=iters)
+        us_vmap = time_call(lambda: vmap_pipeline(*args), iters=iters)
+        us_batched = time_call(lambda: batched_kernel_pipeline(*args),
+                               iters=iters)
+        us_filter = time_call(lambda: srv.rank_batch(batch)["scores"],
+                              iters=iters)
 
-        rows = [("unfused_xla", us_unfused), ("fused_score", us_score),
+        rows = [("unfused_xla", us_unfused), ("fused_score_vmap", us_vmap),
+                ("batched_kernel", us_batched),
                 ("fused_score_filter", us_filter)]
         for name, us in rows:
             ips = items / (us / 1e6)
@@ -101,12 +151,41 @@ def run():
                  f"{us_unfused / us:.2f}x")
         results[(b, g)] = dict(rows)
 
-    r = results[(32, 256)]
-    assert r["fused_score_filter"] <= r["unfused_xla"], (
-        "fused score+filter pipeline must at least match unfused-XLA "
-        f"throughput on (32, 256): {r}")
+    report = {
+        "config": {"buckets": [list(bg) for bg in buckets], "iters": iters,
+                   "smoke": smoke, "backend": jax.default_backend()},
+        "variants": {f"b{b}_g{g}": {name: {"us_per_call": us,
+                                           "items_per_sec": b * g / (us / 1e6)}
+                                    for name, us in r.items()}
+                     for (b, g), r in results.items()},
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"serving/report,, wrote {BENCH_JSON}")
+
+    if not smoke:
+        r = results[(32, 256)]
+        assert r["fused_score_filter"] <= r["unfused_xla"], (
+            "fused score+filter pipeline must at least match unfused-XLA "
+            f"throughput on (32, 256): {r}")
+        # 1.15x slack absorbs CPU wall-clock noise: off-TPU both paths jit
+        # to near-identical XLA (the win being measured is the TPU grid
+        # restructuring), so "no slower than vmap" is the honest floor.
+        assert r["batched_kernel"] <= 1.15 * r["fused_score_vmap"], (
+            "batched-kernel pipeline must at least match the vmap path's "
+            f"throughput on (32, 256): {r}")
     return results
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small bucket, untrained params, no assertions "
+                    "(CI leg: asserts the bench runs and writes "
+                    f"{BENCH_JSON})")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -10,12 +10,19 @@ objective at the default TrainConfig, across the three engine variants:
                 gathers on device, one `jax.lax.scan` per epoch with
                 donated (params, opt_state) — still the multi-forward
                 reference losses. Isolates the scan/donation win.
-  scan_fused  — scan epochs + the single-forward losses (one shared
-                cascade forward + the stop-gradient penalty variant,
-                through the fused scorer op). The shipped default.
+  scan_fused_vmap
+              — scan epochs + the single-forward losses, scoring through
+                jax.vmap of the SINGLE-GROUP scorer op (the PR-2 shipped
+                path, kept as the vmap baseline the batched kernel is
+                measured against).
+  scan_fused_batched
+              — scan epochs + the single-forward losses through the
+                native batched (B, G) scorer entry point (one 2-D grid,
+                zero vmap wrapping of the kernel). The shipped default.
 
 Writes BENCH_train.json (gitignored — machine-local numbers) and asserts
-the shipped engine is >= 2x the pre-PR loop in steps/sec.
+the shipped engine is >= 2x the pre-PR loop in steps/sec and no slower
+than the vmap path.
 
   PYTHONPATH=src python -m benchmarks.train_bench [--smoke]
 """
@@ -30,14 +37,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from functools import partial
+
 from benchmarks.common import emit
 from repro.core import cascade as C
 from repro.core import losses as L
 from repro.core import trainer as T
 from repro.data import LogConfig, features as F, generate_log
+from repro.kernels import ops as K
 from repro.optim.sgd import momentum_sgd
 
 BENCH_JSON = "BENCH_train.json"
+
+
+def _vmap_score(x, w_eff, zq):
+    """The PR-2 scoring path: jax.vmap of the single-group scorer op over
+    the minibatch — the baseline the batched entry point replaces."""
+    return jax.vmap(lambda xb, zb: K.cascade_score(xb, w_eff, zb))(x, zq)
+
+
+# L3 with the vmap'd forward pinned via the losses score_fn seam; the
+# objective math is byte-identical to L.loss_l3.
+vmap_loss_l3 = partial(L.loss_l3, score_fn=_vmap_score)
 
 
 # ---------------------------------------------------------------------------
@@ -147,7 +168,8 @@ def run(*, smoke: bool = False) -> dict:
     variants = [
         ("loop", _time_loop, reference_loss_l3),
         ("scan_donate", _time_scan, reference_loss_l3),
-        ("scan_fused", _time_scan, L.loss_l3),
+        ("scan_fused_vmap", _time_scan, vmap_loss_l3),
+        ("scan_fused_batched", _time_scan, L.loss_l3),
     ]
     results = {}
     for name, driver, loss_fn in variants:
@@ -179,9 +201,16 @@ def run(*, smoke: bool = False) -> dict:
         json.dump(report, f, indent=2)
     print(f"train/report,, wrote {BENCH_JSON}")
     if not smoke:
-        assert results["scan_fused"]["speedup_vs_loop"] >= 2.0, (
+        assert results["scan_fused_batched"]["speedup_vs_loop"] >= 2.0, (
             "fused single-forward scan trainer must be >= 2x the per-step "
             f"loop in steps/sec: {results}")
+        # 1.15x slack absorbs CPU wall-clock noise: off-TPU both forwards
+        # jit to near-identical XLA — the batched entry point must simply
+        # never be slower than the vmap path it replaces.
+        assert (results["scan_fused_batched"]["steps_per_sec"]
+                >= results["scan_fused_vmap"]["steps_per_sec"] / 1.15), (
+            "batched-kernel trainer must at least match the vmap path's "
+            f"steps/sec: {results}")
     return report
 
 

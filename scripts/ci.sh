@@ -1,22 +1,49 @@
 #!/usr/bin/env bash
 # CI entry point: fast loop first (fail fast on logic regressions), then
-# the full tier-1 suite. See ROADMAP.md "Verification loops".
+# the full tier-1 suite, then the bench smoke legs. Every phase prints its
+# wall time; the fast loop FAILS if it exceeds its budget (ROADMAP
+# "Verification loops": the inner dev loop must stay fast — a budget breach
+# means tests need rebalancing onto the `slow` marker, not a bigger budget).
 #
 #   FAST_TIMEOUT / FULL_TIMEOUT   override the per-phase timeouts (seconds)
+#   FAST_BUDGET                   fast-loop wall-time budget (default 90 s;
+#                                 raise only for slow shared machines)
 #   SKIP_FULL=1                   run only the fast loop (local pre-commit)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== fast loop: pytest -m 'not slow' (target < 90 s) =="
+phase_t0=$SECONDS
+phase_done() {            # phase_done <name> -> echoes + returns elapsed
+    local dt=$((SECONDS - phase_t0))
+    echo "== phase '$1' took ${dt} s =="
+    phase_t0=$SECONDS
+    PHASE_ELAPSED=$dt
+}
+
+echo "== fast loop: pytest -m 'not slow' (budget ${FAST_BUDGET:-90} s) =="
 timeout "${FAST_TIMEOUT:-300}" python -m pytest -q -m "not slow"
+phase_done "fast loop"
+if (( PHASE_ELAPSED > ${FAST_BUDGET:-90} )); then
+    echo "FAIL: fast loop took ${PHASE_ELAPSED} s > ${FAST_BUDGET:-90} s budget" >&2
+    echo "      (move tests to the 'slow' marker — see ROADMAP.md)" >&2
+    exit 1
+fi
 
 if [[ "${SKIP_FULL:-0}" != "1" ]]; then
     echo "== full tier-1: pytest -x -q =="
     timeout "${FULL_TIMEOUT:-900}" python -m pytest -x -q
+    phase_done "full tier-1"
 fi
 
 echo "== train bench smoke: must run and write BENCH_train.json =="
 rm -f BENCH_train.json
 timeout "${BENCH_TIMEOUT:-300}" python -m benchmarks.train_bench --smoke
 test -s BENCH_train.json || { echo "BENCH_train.json missing"; exit 1; }
+phase_done "train bench smoke"
+
+echo "== serving bench smoke: must run and write BENCH_serving.json =="
+rm -f BENCH_serving.json
+timeout "${BENCH_TIMEOUT:-300}" python -m benchmarks.serving_bench --smoke
+test -s BENCH_serving.json || { echo "BENCH_serving.json missing"; exit 1; }
+phase_done "serving bench smoke"

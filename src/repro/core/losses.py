@@ -6,8 +6,9 @@ full L3 objective is a single scalar optimized by SGD (paper §3.2).
 
 Every objective derives from ONE shared cascade forward: `cascade_forward`
 computes the (B, G, T) cumulative log pass-probabilities once — through the
-same fused scorer the serving pipeline uses (kernels.ops.cascade_score, a
-custom-VJP Pallas kernel on TPU, the jitted XLA reference elsewhere) — plus
+same BATCHED fused scorer the serving pipeline uses
+(kernels.ops.cascade_score_batched, a custom-VJP Pallas kernel with a 2-D
+(batch, item-block) grid on TPU, the jitted XLA reference elsewhere) — plus
 the one stop-gradient variant L3's w_q-only penalty routing needs. NLL
 (Eq 4/17), expected cost (Eq 8), per-query counts (Eq 10) and the size and
 latency penalties (Eqs 14–16) are all cheap reductions of that tensor; the
@@ -80,26 +81,33 @@ class LossConfig:
 
 def cascade_forward(params: C.Params, cfg: C.CascadeConfig,
                     x: jax.Array, q: jax.Array, *,
-                    penalty_variant: bool = False
-                    ) -> tuple[jax.Array, jax.Array | None]:
+                    penalty_variant: bool = False,
+                    score_fn=None) -> tuple[jax.Array, jax.Array | None]:
     """(B, G, T) cumulative log pass-probabilities through the fused scorer.
 
-    x: (B, G, d_x), q: (B, d_q). With penalty_variant, also returns the
-    stop-gradient routing L3's UX penalties need: the same primal values,
-    but with w_x and b held constant so penalty gradients flow only into
-    the query-only weights w_q (see loss_l3). The x-side matmul dominates
-    the forward; the variant re-runs only the scorer on already-computed
-    inputs with the gradient taps moved, not a new loss formulation.
+    x: (B, G, d_x), q: (B, d_q). The scorer is the BATCHED entry point
+    (kernels.ops.cascade_score_batched — one 2-D (batch, item-block) grid,
+    no jax.vmap wrapping); score_fn overrides it with any
+    (x, w_eff, zq) -> lp callable (the training benchmark pins the old
+    vmap-of-single-group path this way to measure the batched win).
+
+    With penalty_variant, also returns the stop-gradient routing L3's UX
+    penalties need: the same primal values, but with w_x and b held
+    constant so penalty gradients flow only into the query-only weights
+    w_q (see loss_l3). The x-side matmul dominates the forward; the
+    variant re-runs only the scorer on already-computed inputs with the
+    gradient taps moved, not a new loss formulation.
     """
+    score = score_fn or K.cascade_score_batched
     masks = jnp.asarray(cfg.masks, dtype=x.dtype)
     w_eff = params["w_x"] * masks                                   # (T, d_x)
     zq = q @ params["w_q"].T + params["b"]                          # (B, T)
-    lp = jax.vmap(lambda xb, zb: K.cascade_score(xb, w_eff, zb))(x, zq)
+    lp = score(x, w_eff, zq)
     if not penalty_variant:
         return lp, None
     w_pen = jax.lax.stop_gradient(w_eff)
     zq_pen = q @ params["w_q"].T + jax.lax.stop_gradient(params["b"])
-    lp_pen = jax.vmap(lambda xb, zb: K.cascade_score(xb, w_pen, zb))(x, zq_pen)
+    lp_pen = score(x, w_pen, zq_pen)
     return lp, lp_pen
 
 
@@ -275,7 +283,8 @@ def loss_l2(params, cfg: C.CascadeConfig, lcfg: LossConfig, batch) -> jax.Array:
     return _l2_from_lp(params, lp, cfg, lcfg, batch)
 
 
-def loss_l3(params, cfg: C.CascadeConfig, lcfg: LossConfig, batch) -> jax.Array:
+def loss_l3(params, cfg: C.CascadeConfig, lcfg: LossConfig, batch,
+            *, score_fn=None) -> jax.Array:
     """The deployed CLOES objective (Eq 15).
 
     Gradient routing: the two user-experience penalties adjust only the
@@ -291,7 +300,8 @@ def loss_l3(params, cfg: C.CascadeConfig, lcfg: LossConfig, batch) -> jax.Array:
     pre-refactor code ran two extra expected_counts_per_query passes here.
     """
     x, q, mask, m_q = batch["x"], batch["q"], batch["mask"], batch["m_q"]
-    lp, lp_pen = cascade_forward(params, cfg, x, q, penalty_variant=True)
+    lp, lp_pen = cascade_forward(params, cfg, x, q, penalty_variant=True,
+                                 score_fn=score_fn)
     counts_pen = counts_from_lp(lp_pen, mask, m_q, batch.get("mn"))  # (B, T)
     # result-size floor: penalize E[Count_{q,T}] < N_o — but never ask for more
     # results than the query recalls (tail queries with M_q < N_o are exempt

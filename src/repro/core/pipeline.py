@@ -22,6 +22,10 @@ import jax.numpy as jnp
 from repro.core import cascade as C
 from repro.kernels import ops as K
 
+# The serving modes run_cascade accepts — shared with CascadeServer so the
+# two validation sites cannot drift.
+FUSED_MODES = ("none", "score", "filter")
+
 
 def keep_counts_from_lp(lp: jax.Array, mask: jax.Array,
                         m_q: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -66,11 +70,16 @@ def run_cascade(params: C.Params, cfg: C.CascadeConfig,
     """Score + hard-filter a padded (B, G) candidate batch.
 
     fused: 'none'   — XLA scorer + XLA stage chain (the reference path);
-           'score'  — fused Pallas scorer, XLA stage chain;
+           'score'  — batched fused Pallas scorer, XLA stage chain;
            'filter' — fully fused score+filter kernel (one VMEM pass).
 
     Returns lp (B, G, T), survivors (B, G, T), scores (B, G),
     expected_counts (B, T), n_keep (B, T), kept_per_stage (B, T)."""
+    # Validate the mode BEFORE any compute: an unknown mode must not cost
+    # a scoring setup (w_eff/zq) or surface as a downstream shape error.
+    if fused not in FUSED_MODES:
+        raise ValueError(f"unknown fused mode: {fused!r} "
+                         f"(expected one of {FUSED_MODES})")
     # One scoring formulation for every mode (precomputed w_eff / zq, the
     # kernel's decomposition): the fused and unfused paths must agree not
     # just to tolerance but on every DISCRETE decision (ceil'd keep
@@ -84,15 +93,11 @@ def run_cascade(params: C.Params, cfg: C.CascadeConfig,
         counts, n_keep = out["expected_counts"], out["n_keep"]
     else:
         if fused == "score":
-            lp = jax.vmap(
-                lambda xb, zqb: K.cascade_score(xb, w_eff, zqb,
-                                                interpret=interpret))(x, zq)
-        elif fused == "none":
-            logits = (jnp.einsum("bgd,td->bgt", x.astype(jnp.float32), w_eff)
-                      + zq[:, None, :])
-            lp = jnp.cumsum(jax.nn.log_sigmoid(logits), axis=-1)
-        else:
-            raise ValueError(f"unknown fused mode: {fused!r}")
+            # the native batched (B, G) kernel entry point — one 2-D grid
+            # launch, no jax.vmap restructuring (see kernels/cascade_score)
+            lp = K.cascade_score_batched(x, w_eff, zq, interpret=interpret)
+        else:  # "none"
+            lp = K.cascade_score_batched_ref(x, w_eff, zq)
         counts, n_keep = keep_counts_from_lp(lp, mask, m_q)
         surv = filter_chain(lp, mask, n_keep)
     return {

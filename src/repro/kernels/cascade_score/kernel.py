@@ -12,6 +12,32 @@ gating* of the paper is a cost-model construct (features are columns of a
 precomputed matrix here); the fused kernel realizes the TPU-native analogue
 of "cheap pass over all items" — a single streaming pass at one item-block
 per grid step with MXU-aligned (block, 128)-shaped tiles.
+
+Batched (B, G) layout — the shared serving/training entry point
+---------------------------------------------------------------
+Serving scores padded batches of query groups (B groups of G candidates,
+one query-side bias row zq[b] per group) and the trainer scores the same
+layout per minibatch. `cascade_score_batched` runs that natively on a 2-D
+(batch, item-block) grid instead of `jax.vmap` over the single-group
+kernel — vmap restructures the grid through the batching rule, forcing
+per-group dispatch and re-deriving block maps on TPU.
+
+Layout and padding contract (forward and backward identically):
+
+  * grid = (B, G_pad // BLOCK_GROUP) with BLOCK_GROUP =
+    min(BLOCK_ITEMS, G rounded up to the 8-row sublane); G is padded to a
+    multiple of BLOCK_GROUP, d to the 128 LANE width, T to MAX_STAGES.
+  * per grid step (b, j): one (1, BLOCK_GROUP, d_pad) feature tile of
+    group b, the full (MAX_STAGES, d_pad) weight block (resident across
+    the whole grid), and group b's (1, MAX_STAGES) bias row.
+  * padded items / stages / features are zero: zero features and zero
+    weights leave each real item's dot product bit-identical, so the
+    unpadded (B, G, T) slice equals the single-group kernel's output
+    bit for bit (same float ops in the same order, per item).
+  * backward: dx is emitted per block; dw accumulates across the whole
+    (sequential) grid in its resident block; dzq[b] accumulates across
+    group b's item blocks. Padded rows/stages carry zero cotangent and
+    contribute nothing.
 """
 
 from __future__ import annotations
@@ -165,6 +191,151 @@ def cascade_score_bwd(x: jax.Array, w_eff: jax.Array, zq: jax.Array,
         interpret=interpret,
     )(xp, wp, zqp, gp)
     return dx[:n, :d], dw[:t, :d], dzq[0, :t]
+
+
+# ---------------------------------------------------------------------------
+# Batched (B, G) entry point — see the module docstring's layout section.
+# One forward/backward pair on a 2-D (batch, item-block) grid, shared by
+# the serving pipeline (fused="score"), the trainer's fused forward, and
+# CascadeServer. The kernel bodies mirror _kernel/_bwd_kernel exactly so
+# the per-item math is bit-identical to the single-group kernel.
+# ---------------------------------------------------------------------------
+
+
+def _block_group(g: int) -> int:
+    """Item-block size for a (B, G) batch: whole group when it fits in one
+    sublane-aligned block, BLOCK_ITEMS tiles otherwise."""
+    return min(BLOCK_ITEMS, g + (-g) % SUBLANE)
+
+
+def _pad_batched(x, w_eff, zq):
+    """Shared padding for the batched forward/backward: G to a multiple of
+    the block, d to LANE, T to MAX_STAGES."""
+    b, g, d = x.shape
+    t = w_eff.shape[0]
+    assert t <= MAX_STAGES, f"cascade of {t} stages > {MAX_STAGES}"
+    bg = _block_group(g)
+    xp = jnp.pad(x, ((0, 0), (0, (-g) % bg), (0, (-d) % LANE)))
+    wp = jnp.pad(w_eff, ((0, MAX_STAGES - t), (0, (-d) % LANE)))
+    zqp = jnp.pad(zq, ((0, 0), (0, MAX_STAGES - t)))
+    return xp, wp, zqp, bg
+
+
+def _batched_kernel(x_ref, w_ref, zq_ref, out_ref):
+    """x: (1, BG, d_pad), w: (T_pad, d_pad), zq: (1, T_pad) ->
+    out (1, BG, T_pad)."""
+    x = x_ref[0].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    zq = zq_ref[...].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (BG, T_pad) on MXU
+    logits = logits + zq                                # broadcast (1, T_pad)
+    out_ref[0] = jnp.cumsum(jax.nn.log_sigmoid(logits), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cascade_score_batched(x: jax.Array, w_eff: jax.Array, zq: jax.Array,
+                          *, interpret: bool = False) -> jax.Array:
+    """x: (B, G, d), w_eff: (T, d), zq: (B, T) -> (B, G, T) cumulative log
+    pass-probs. The batched layout/padding contract is in the module
+    docstring."""
+    b, g, d = x.shape
+    t = w_eff.shape[0]
+    xp, wp, zqp, bg = _pad_batched(x, w_eff, zq)
+    gp, dp = xp.shape[1], xp.shape[2]
+    out = pl.pallas_call(
+        _batched_kernel,
+        grid=(b, gp // bg),
+        in_specs=[
+            pl.BlockSpec((1, bg, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((MAX_STAGES, dp), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, MAX_STAGES), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bg, MAX_STAGES), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, gp, MAX_STAGES), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, zqp)
+    return out[:, :g, :t]
+
+
+def _batched_bwd_kernel(x_ref, w_ref, zq_ref, g_ref,
+                        dx_ref, dw_ref, dzq_ref):
+    """Backward of the batched scorer — same math as _bwd_kernel, with dw
+    accumulated across the whole grid and dzq[b] across group b's blocks.
+    x/g: (1, BG, ·), w: (T_pad, d_pad), zq: (1, T_pad)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    x = x_ref[0].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    zq = zq_ref[...].astype(jnp.float32)
+    g = g_ref[0].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) + zq            # (BG, T_pad)
+    # reverse cumsum over stages: gc[:, k] = sum_{j>=k} g[:, j]
+    gc = g.sum(axis=-1, keepdims=True) - jnp.cumsum(g, axis=-1) + g
+    g_logit = gc * jax.nn.sigmoid(-logits)                  # (BG, T_pad)
+    dx_ref[0] = jax.lax.dot_general(
+        g_logit, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (BG, d_pad)
+    dw_blk = jax.lax.dot_general(
+        g_logit, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (T_pad, d_pad)
+    dzq_blk = g_logit.sum(axis=0, keepdims=True)            # (1, T_pad)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_dw():
+        dw_ref[...] = dw_blk
+
+    @pl.when((i > 0) | (j > 0))
+    def _accum_dw():
+        dw_ref[...] += dw_blk
+
+    @pl.when(j == 0)
+    def _init_dzq():
+        dzq_ref[...] = dzq_blk
+
+    @pl.when(j > 0)
+    def _accum_dzq():
+        dzq_ref[...] += dzq_blk
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cascade_score_batched_bwd(x: jax.Array, w_eff: jax.Array, zq: jax.Array,
+                              g: jax.Array, *, interpret: bool = False
+                              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Backward of `cascade_score_batched`: cotangent g (B, G, T) ->
+    (dx (B, G, d), dw_eff (T, d), dzq (B, T)). Same padding as the forward;
+    padded rows/stages carry zero cotangent."""
+    b, g_items, d = x.shape
+    t = w_eff.shape[0]
+    xp, wp, zqp, bg = _pad_batched(x, w_eff, zq)
+    gp, dp = xp.shape[1], xp.shape[2]
+    gct = jnp.pad(g.astype(jnp.float32),
+                  ((0, 0), (0, gp - g_items), (0, MAX_STAGES - t)))
+    dx, dw, dzq = pl.pallas_call(
+        _batched_bwd_kernel,
+        grid=(b, gp // bg),
+        in_specs=[
+            pl.BlockSpec((1, bg, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((MAX_STAGES, dp), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, MAX_STAGES), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bg, MAX_STAGES), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bg, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((MAX_STAGES, dp), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, MAX_STAGES), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, gp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((MAX_STAGES, dp), jnp.float32),
+            jax.ShapeDtypeStruct((b, MAX_STAGES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wp, zqp, gct)
+    return dx[:, :g_items, :d], dw[:t, :d], dzq[:, :t]
 
 
 # ---------------------------------------------------------------------------

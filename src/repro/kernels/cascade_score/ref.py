@@ -25,6 +25,20 @@ def cascade_score_ref(x: jax.Array, w_eff: jax.Array,
     return jnp.cumsum(jax.nn.log_sigmoid(logits), axis=-1)
 
 
+def cascade_score_batched_ref(x: jax.Array, w_eff: jax.Array,
+                              zq: jax.Array) -> jax.Array:
+    """Batched oracle: x (B, G, d), w_eff (T, d), zq (B, T) -> (B, G, T).
+
+    The per-(batch, item) math is cascade_score_ref's exactly — this is
+    both the parity oracle for the batched Pallas kernel and the
+    production non-TPU path (natively autodiff-able, see kernels/ops.py).
+    """
+    logits = (jnp.einsum("bgd,td->bgt", x.astype(jnp.float32),
+                         w_eff.astype(jnp.float32))
+              + zq.astype(jnp.float32)[:, None, :])
+    return jnp.cumsum(jax.nn.log_sigmoid(logits), axis=-1)
+
+
 def cascade_score_bwd_ref(x: jax.Array, w_eff: jax.Array, zq: jax.Array,
                           g: jax.Array) -> tuple[jax.Array, jax.Array,
                                                  jax.Array]:

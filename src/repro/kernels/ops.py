@@ -19,10 +19,14 @@ import jax
 
 from repro.kernels.cascade_filter.kernel import cascade_filter as _cascade_filter
 from repro.kernels.cascade_filter.ref import cascade_filter_ref
-from repro.kernels.cascade_score.kernel import (cascade_score as _cascade_score,
-                                                cascade_score_bwd as _cascade_score_bwd,
-                                                cascade_score_fm as _cascade_score_fm)
-from repro.kernels.cascade_score.ref import (cascade_score_bwd_ref,
+from repro.kernels.cascade_score.kernel import (
+    cascade_score as _cascade_score,
+    cascade_score_batched as _cascade_score_batched,
+    cascade_score_batched_bwd as _cascade_score_batched_bwd,
+    cascade_score_bwd as _cascade_score_bwd,
+    cascade_score_fm as _cascade_score_fm)
+from repro.kernels.cascade_score.ref import (cascade_score_batched_ref,
+                                             cascade_score_bwd_ref,
                                              cascade_score_ref)
 from repro.kernels.swa_decode.kernel import swa_decode as _swa_decode, NO_WINDOW
 from repro.kernels.swa_decode.ref import swa_decode_ref
@@ -30,6 +34,18 @@ from repro.kernels.swa_decode.ref import swa_decode_ref
 
 def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _require_ranks(op: str, **named) -> None:
+    """One consistent ValueError for rank-mismatched wrapper inputs, raised
+    at the public API instead of as a shape error from inside pallas_call.
+    Each kwarg maps a name to (array, expected_rank)."""
+    bad = [f"{name} has rank {getattr(arr, 'ndim', None)} "
+           f"(shape {tuple(getattr(arr, 'shape', ()))}), expected rank {want}"
+           for name, (arr, want) in named.items()
+           if getattr(arr, "ndim", None) != want]
+    if bad:
+        raise ValueError(f"{op}: rank-mismatched inputs: " + "; ".join(bad))
 
 
 # ---------------------------------------------------------------------------
@@ -58,6 +74,25 @@ def _cascade_score_bwd_rule(interpret, res, g):
 _cascade_score_pallas.defvjp(_cascade_score_fwd, _cascade_score_bwd_rule)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _cascade_score_batched_pallas(interpret, x, w_eff, zq):
+    return _cascade_score_batched(x, w_eff, zq, interpret=interpret)
+
+
+def _cascade_score_batched_fwd(interpret, x, w_eff, zq):
+    return (_cascade_score_batched_pallas(interpret, x, w_eff, zq),
+            (x, w_eff, zq))
+
+
+def _cascade_score_batched_bwd_rule(interpret, res, g):
+    x, w_eff, zq = res
+    return _cascade_score_batched_bwd(x, w_eff, zq, g, interpret=interpret)
+
+
+_cascade_score_batched_pallas.defvjp(_cascade_score_batched_fwd,
+                                     _cascade_score_batched_bwd_rule)
+
+
 def cascade_score(x, w_eff, zq, *, interpret: bool | None = None):
     """Fused T-stage cascade scoring: (N, d) items -> (N, T) cumulative
     log pass-probabilities. See kernels/cascade_score/kernel.py.
@@ -67,6 +102,7 @@ def cascade_score(x, w_eff, zq, *, interpret: bool | None = None):
     the jitted XLA reference on non-TPU backends — so the training losses
     score through the same op as the serving pipeline. interpret=True
     forces the Pallas interpreter on both passes (parity tests)."""
+    _require_ranks("cascade_score", x=(x, 2), w_eff=(w_eff, 2), zq=(zq, 1))
     if interpret is None:
         if _auto_interpret():
             return cascade_score_ref(x, w_eff, zq)
@@ -74,9 +110,30 @@ def cascade_score(x, w_eff, zq, *, interpret: bool | None = None):
     return _cascade_score_pallas(interpret, x, w_eff, zq)
 
 
+def cascade_score_batched(x, w_eff, zq, *, interpret: bool | None = None):
+    """Batched fused scorer: x (B, G, d) padded query groups, w_eff (T, d),
+    zq (B, T) per-group biases -> (B, G, T) cumulative log pass-probs.
+
+    THE shared serving/training scoring entry point (core.pipeline
+    fused="score", losses.cascade_forward, CascadeServer): a native 2-D
+    (batch, item-block) grid with no jax.vmap wrapping of the kernel.
+    Differentiable on every path — custom VJP with the batched Pallas
+    backward kernel on TPU/interpret, plain autodiff through the batched
+    XLA reference elsewhere."""
+    _require_ranks("cascade_score_batched",
+                   x=(x, 3), w_eff=(w_eff, 2), zq=(zq, 2))
+    if interpret is None:
+        if _auto_interpret():
+            return cascade_score_batched_ref(x, w_eff, zq)
+        interpret = False
+    return _cascade_score_batched_pallas(interpret, x, w_eff, zq)
+
+
 def cascade_score_fm(xt, w_eff, zq, *, interpret: bool | None = None):
     """Feature-major fused scorer: xt (d, N) -> (N, T). The production
     layout — see kernels/cascade_score/kernel.py."""
+    _require_ranks("cascade_score_fm", xt=(xt, 2), w_eff=(w_eff, 2),
+                   zq=(zq, 1))
     if interpret is None:
         if _auto_interpret():
             return cascade_score_ref(xt.T, w_eff, zq)
@@ -93,6 +150,8 @@ def cascade_filter(x, w_eff, zq, mask, m_q, *, interpret: bool | None = None):
     semantics — see kernels/cascade_filter/ref.py) rather than crawling
     through the Pallas interpreter. interpret=True forces the interpreter
     for kernel-body parity testing."""
+    _require_ranks("cascade_filter", x=(x, 3), w_eff=(w_eff, 2), zq=(zq, 2),
+                   mask=(mask, 2), m_q=(m_q, 1))
     if interpret is None:
         if _auto_interpret():
             return cascade_filter_ref(x, w_eff, zq, mask, m_q)
@@ -109,6 +168,7 @@ def swa_decode(q, k, v, cache_len, *, window: int = NO_WINDOW,
     return _swa_decode(q, k, v, cache_len, window=window, interpret=interpret)
 
 
-__all__ = ["cascade_score", "cascade_score_fm", "cascade_score_ref",
-           "cascade_score_bwd_ref", "cascade_filter", "cascade_filter_ref",
-           "swa_decode", "swa_decode_ref", "NO_WINDOW"]
+__all__ = ["cascade_score", "cascade_score_batched",
+           "cascade_score_batched_ref", "cascade_score_fm",
+           "cascade_score_ref", "cascade_score_bwd_ref", "cascade_filter",
+           "cascade_filter_ref", "swa_decode", "swa_decode_ref", "NO_WINDOW"]

@@ -56,17 +56,23 @@ class RequestBatcher:
                 return b
         return self.buckets[-1]
 
-    def drain(self) -> Iterator[tuple[list[RankRequest], dict]]:
-        """Yield (requests, padded batch arrays) until the queue is empty.
-        Items beyond the largest bucket are truncated (and noted)."""
-        by_bucket: dict[int, list[RankRequest]] = {}
-        for r in self._queue:
-            by_bucket.setdefault(self._bucket(len(r.item_feats)), []).append(r)
+    def drain(self) -> Iterator[tuple[list[int], list[RankRequest], dict]]:
+        """Yield (submit_seqs, requests, padded batch arrays) until the
+        queue is empty. Batches are grouped per shape bucket, so they do
+        NOT come out in submit order — submit_seqs carries each request's
+        position in the submit stream so callers (CascadeServer.serve)
+        can restore it. Items beyond the largest bucket are truncated
+        (and noted)."""
+        by_bucket: dict[int, list[tuple[int, RankRequest]]] = {}
+        for seq, r in enumerate(self._queue):
+            by_bucket.setdefault(self._bucket(len(r.item_feats)),
+                                 []).append((seq, r))
         self._queue.clear()
-        for g, reqs in sorted(by_bucket.items()):
-            for s in range(0, len(reqs), self.batch_groups):
-                chunk = reqs[s:s + self.batch_groups]
-                yield chunk, self._pad(chunk, g)
+        for g, pairs in sorted(by_bucket.items()):
+            for s in range(0, len(pairs), self.batch_groups):
+                chunk = pairs[s:s + self.batch_groups]
+                reqs = [r for _, r in chunk]
+                yield [seq for seq, _ in chunk], reqs, self._pad(reqs, g)
 
     def _pad(self, reqs: list[RankRequest], g: int) -> dict:
         # The batch axis is padded to the next power of two (capped at

@@ -92,14 +92,28 @@ class CascadeServer:
                  lcfg: L.LossConfig | None = None,
                  neural_stage: NeuralScorer | None = None,
                  neural_cost: float = 0.84,
-                 use_fused_kernel: bool = True):
+                 use_fused_kernel: bool = True,
+                 fused: str | None = None,
+                 batcher: RequestBatcher | None = None):
         self.params = jax.tree_util.tree_map(jnp.asarray, params)
         self.cfg = cfg
         self.lcfg = lcfg or L.LossConfig()
         self.neural = neural_stage
         self.neural_cost = neural_cost
-        self.use_fused_kernel = use_fused_kernel
-        self.batcher = RequestBatcher()
+        # fused selects the core.pipeline mode directly ('filter' — the
+        # fully fused kernel, 'score' — the batched scorer + XLA stage
+        # chain, 'none' — the XLA reference path); the use_fused_kernel
+        # bool is the pre-batched-scorer API and maps to filter/none.
+        # An explicit fused= always takes precedence over the legacy bool.
+        self.fused = fused if fused is not None else (
+            "filter" if use_fused_kernel else "none")
+        if self.fused not in P.FUSED_MODES:
+            # same up-front contract as run_cascade: fail at construction,
+            # not from inside the first rank_batch trace
+            raise ValueError(f"unknown fused mode: {self.fused!r} "
+                             f"(expected one of {P.FUSED_MODES})")
+        self.use_fused_kernel = self.fused == "filter"
+        self.batcher = batcher if batcher is not None else RequestBatcher()
         # The whole serving pipeline (scoring -> filtering -> latency
         # estimate) is ONE jitted function; the batcher's fixed shape
         # buckets keep its compile cache small. Only mask (B, G) and m_q
@@ -116,7 +130,7 @@ class CascadeServer:
                    mask: jax.Array, m_q: jax.Array) -> dict:
         """Score -> hard filter -> latency estimate, end to end."""
         out = P.run_cascade(params, self.cfg, x, q, mask, m_q,
-                            fused="filter" if self.use_fused_kernel else "none")
+                            fused=self.fused)
         surv = out["survivors"][..., -1]
         final_scores = jnp.where(surv > 0, out["scores"], -jnp.inf)
 
@@ -170,22 +184,24 @@ class CascadeServer:
         self.batcher.submit(req)
 
     def serve(self) -> list[RankResponse]:
-        out: list[RankResponse] = []
-        for reqs, batch in self.batcher.drain():
+        # The batcher drains bucket by bucket (shape order, not submit
+        # order); responses are restored to submit order before return.
+        out: list[tuple[int, RankResponse]] = []
+        for seqs, reqs, batch in self.batcher.drain():
             res = self.rank_batch(batch)
             scores = np.asarray(res["scores"])
             surv = np.asarray(res["survivors"])
             lat = np.asarray(res["est_latency_ms"])
             stage_counts = np.asarray(res["stage_survivors"].sum(axis=1))
-            for i, r in enumerate(reqs):
+            for i, (seq, r) in enumerate(zip(seqs, reqs)):
                 n = len(r.item_feats)
                 order = np.argsort(-scores[i][:n], kind="stable")
-                out.append(RankResponse(
+                out.append((seq, RankResponse(
                     request_id=r.request_id,
                     order=order,
                     scores=scores[i][:n],
                     survivors=surv[i][:n] > 0,
                     est_latency_ms=float(lat[i]),
                     stage_counts=[int(c) for c in stage_counts[i]],
-                ))
-        return out
+                )))
+        return [resp for _, resp in sorted(out, key=lambda p: p[0])]

@@ -22,9 +22,10 @@ from repro.data import generate_log, LogConfig
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",
-        "slow: long-running per-architecture smoke / perf-variant tests; "
-        "the fast loop (-m 'not slow', target < 90 s) excludes them — see "
-        "ROADMAP.md 'Verification loops'")
+        "slow: long-running per-architecture smoke / perf-variant / "
+        "bf16-dtype sweep / cross-engine integration tests; the fast loop "
+        "(-m 'not slow', 90 s budget enforced by scripts/ci.sh) excludes "
+        "them — see ROADMAP.md 'Verification loops'")
 
 
 @pytest.fixture(scope="session")

@@ -14,9 +14,15 @@ from repro.kernels.cascade_filter.ref import cascade_filter_ref
 # cascade_score
 # ---------------------------------------------------------------------------
 
+# bfloat16 rows exercise only the kernels' input up-cast on top of the f32
+# math; they ride the full tier-1 run (slow), keeping the fast loop inside
+# its 90 s budget (scripts/ci.sh enforces it — see ROADMAP).
+_BF16 = pytest.param(jnp.bfloat16, marks=pytest.mark.slow)
+
+
 @pytest.mark.parametrize("n", [1, 7, 512, 1000, 2048])
 @pytest.mark.parametrize("d,t", [(24, 3), (8, 1), (128, 8), (40, 5)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32, _BF16])
 def test_cascade_score_sweep(n, d, t, dtype):
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n * 131 + d), 3)
     x = jax.random.normal(k1, (n, d), dtype)
@@ -69,10 +75,11 @@ def _assert_filter_parity(x, w, zq, mask, m_q, tol):
     return got
 
 
-@pytest.mark.parametrize("g", [1, 7, 48, 130,
+@pytest.mark.parametrize("g", [1, 7, 48,
+                               pytest.param(130, marks=pytest.mark.slow),
                                pytest.param(256, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("d,t", [(24, 3), (8, 1), (40, 5)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32, _BF16])
 def test_cascade_filter_sweep(g, d, t, dtype):
     tol = 1e-5 if dtype == jnp.float32 else 3e-2
     _assert_filter_parity(*_filter_case(2, g, d, t, dtype, seed=g * 37 + d),
@@ -122,16 +129,18 @@ def test_cascade_filter_chain_is_nested():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("b,h,hkv,hd", [
-    (1, 4, 4, 64), (2, 8, 2, 64), (3, 8, 1, 128),
+    (1, 4, 4, 64),
+    pytest.param(2, 8, 2, 64, marks=pytest.mark.slow),
+    pytest.param(3, 8, 1, 128, marks=pytest.mark.slow),
     pytest.param(2, 16, 16, 128, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("s,cache_len,window", [
     (1024, 1000, ops.NO_WINDOW),
-    (1024, 511, 256),
+    pytest.param(1024, 511, 256, marks=pytest.mark.slow),
     pytest.param(2048, 2047, 1024, marks=pytest.mark.slow),
     (512, 0, ops.NO_WINDOW),
 ])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32, _BF16])
 def test_swa_decode_sweep(b, h, hkv, hd, s, cache_len, window, dtype):
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b * 7 + s), 3)
     q = jax.random.normal(k1, (b, h, hd), dtype)
@@ -176,7 +185,7 @@ def test_swa_decode_window_excludes_old_positions():
 
 
 @pytest.mark.parametrize("n,d,t", [(1000, 24, 3), (512, 8, 1), (2048, 40, 5)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32, _BF16])
 def test_cascade_score_feature_major_sweep(n, d, t, dtype):
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n + d), 3)
     x = jax.random.normal(k1, (n, d), dtype)

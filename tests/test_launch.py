@@ -127,7 +127,7 @@ def test_batcher_buckets_and_padding():
                              item_feats=np.zeros((n, 24), np.float32),
                              m_q=100 + n))
     seen = set()
-    for reqs, batch in b.drain():
+    for _seqs, reqs, batch in b.drain():
         assert batch["x"].shape[1] in (16, 64)
         # batch axis is padded to the next power of two (capped at
         # batch_groups) so batch shapes come from a small warm set

@@ -66,7 +66,9 @@ except ImportError:                      # deterministic fallback sweep
 from repro.core import cascade as C
 from repro.core import losses as L
 from repro.core import metrics as M
+from repro.core import pipeline as P
 from repro.data import features as F
+from repro.kernels import ops as K
 
 _settings = dict(max_examples=25, deadline=None)
 
@@ -145,6 +147,107 @@ def test_importance_weights_ordering(seed, eps, mu):
     wp = np.asarray(L.importance_weights(jnp.full(20, 2, jnp.int32), price, lcfg))
     assert (wp >= wc - 1e-6).all()
     assert (wn == 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# Discrete serving decisions: keep_counts_from_lp / filter_chain invariants,
+# asserting the fused kernel and the unfused XLA chain agree on EVERY keep
+# count and survivor mask across the edge cases (fully masked rows, single
+# survivor, exact ties, m_q < n_q).
+# ---------------------------------------------------------------------------
+
+def _filter_paths(x, w, zq, mask, m_q):
+    """(fused kernel output, unfused chain output on the reference lp)."""
+    fused = K.cascade_filter(x, w, zq, mask, m_q, interpret=True)
+    lp = K.cascade_score_batched_ref(x, w, zq)
+    counts, n_keep = P.keep_counts_from_lp(lp, mask, m_q)
+    surv = P.filter_chain(lp, mask, n_keep)
+    return fused, {"lp": lp, "expected_counts": counts, "n_keep": n_keep,
+                   "survivors": surv}
+
+
+def _assert_decisions_agree(fused, unfused, mask):
+    g = mask.shape[-1]
+    n_keep = np.asarray(fused["n_keep"])
+    surv = np.asarray(fused["survivors"])
+    np.testing.assert_array_equal(n_keep, np.asarray(unfused["n_keep"]))
+    np.testing.assert_array_equal(surv, np.asarray(unfused["survivors"]))
+    assert ((1 <= n_keep) & (n_keep <= g)).all()          # Eq-10 clip bounds
+    assert (np.diff(surv, axis=-1) <= 0).all()            # chain is nested
+    assert (surv[..., 0] <= np.asarray(mask)).all()
+    # a stage never keeps more than its keep count
+    assert (surv.sum(axis=1) <= n_keep + 1e-6).all()
+
+
+def _filter_case(seed, b, g, t=3, d=24):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, g, d)), jnp.float32)
+    w = jnp.asarray(0.3 * rng.normal(size=(t, d)), jnp.float32)
+    zq = jnp.asarray(rng.normal(size=(b, t)), jnp.float32)
+    mask = jnp.asarray(rng.random((b, g)) < 0.8, jnp.float32)
+    m_q = jnp.asarray(rng.integers(1, 6 * g, b), jnp.float32)
+    return x, w, zq, mask, m_q
+
+
+# shapes are FIXED per test (edge-case variety comes from the mask / tie /
+# m_q constructions, shape sweeps live in test_kernels.py): every case of a
+# test then reuses one jitted interpret-mode kernel compilation, keeping
+# the fallback grid inside the fast loop's budget.
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_filter_decisions_agree_with_fully_masked_rows(seed):
+    """Rows with no valid items must keep nothing on either path (even
+    though n_keep is floored at 1), without disturbing other rows."""
+    x, w, zq, mask, m_q = _filter_case(seed, 2, 24)
+    mask = mask.at[0].set(0.0)                      # one all-masked group
+    fused, unfused = _filter_paths(x, w, zq, mask, m_q)
+    _assert_decisions_agree(fused, unfused, mask)
+    assert np.asarray(fused["survivors"])[0].sum() == 0
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_filter_single_survivor(seed):
+    """Exactly one valid item per group: it must survive every stage on
+    both paths (n_keep >= 1 by the Eq-10 floor)."""
+    g = 16
+    x, w, zq, mask, m_q = _filter_case(seed, 2, g)
+    keep = seed % g
+    mask = jnp.zeros_like(mask).at[:, keep].set(1.0)
+    fused, unfused = _filter_paths(x, w, zq, mask, m_q)
+    _assert_decisions_agree(fused, unfused, mask)
+    surv = np.asarray(fused["survivors"])
+    assert (surv[:, keep, :] == 1).all()
+    assert surv.sum() == surv.shape[0] * surv.shape[-1]
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_filter_exact_ties_break_stably(seed):
+    """Duplicated items produce exact score ties; both paths must break
+    them identically — STABLY, the lowest index winning."""
+    x, w, zq, mask, m_q = _filter_case(seed, 2, 16)
+    x = x.at[:, 1::2].set(x[:, ::2])               # every item has a twin
+    mask = jnp.ones_like(mask)
+    fused, unfused = _filter_paths(x, w, zq, mask, m_q)
+    _assert_decisions_agree(fused, unfused, mask)
+    surv = np.asarray(fused["survivors"])
+    # stability: a kept twin at an odd index implies its even twin is kept
+    assert (surv[:, 1::2, :] <= surv[:, 0::2, :]).all()
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_filter_mq_below_valid_count(seed):
+    """m_q < N_q (more logged instances than recalled items — the Eq-10
+    extrapolation factor < 1): keep counts stay in [1, G] and the paths
+    agree on every decision."""
+    x, w, zq, mask, m_q = _filter_case(seed, 2, 24)
+    mask = jnp.ones_like(mask)
+    m_q = jnp.maximum(jnp.asarray(mask.sum(-1)) // 2, 1.0)   # m_q = N_q/2
+    fused, unfused = _filter_paths(x, w, zq, mask, m_q)
+    _assert_decisions_agree(fused, unfused, mask)
 
 
 @given(st.integers(0, 10**6))

@@ -75,6 +75,7 @@ def test_server_end_to_end(trained):
         assert ranked_surv[:first_nonsurv].all()
 
 
+@pytest.mark.slow
 def test_server_with_neural_final_stage(trained):
     params, cfg, lcfg, tr, te = trained
     ncfg = dataclasses.replace(CFG.get_smoke("starcoder2-3b"),
@@ -141,6 +142,7 @@ def test_served_responses_identical_across_paths(trained):
         assert fused[rid].stage_counts == plain[rid].stage_counts
 
 
+@pytest.mark.slow
 def test_ux_penalties_improve_tail_counts(trained):
     """The system-level UX claim on a small log (Fig 4 bottom)."""
     _, cfg, _, tr, te = trained

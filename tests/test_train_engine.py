@@ -277,6 +277,7 @@ def train_cfg():
                            F.stage_costs(masks))
 
 
+@pytest.mark.slow
 def test_scan_fit_reproduces_loop_trajectory(tiny_log, train_cfg):
     lcfg = L.LossConfig(beta=2.0)
     traj = {}
@@ -297,6 +298,7 @@ def test_scan_fit_reproduces_loop_trajectory(tiny_log, train_cfg):
                                    rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_scan_fit_mesh_single_device_fallback(tiny_log, train_cfg):
     """A 1-device data mesh must reproduce the plain scan path."""
     lcfg = L.LossConfig(beta=2.0)
@@ -361,6 +363,7 @@ def test_evaluate_single_forward_matches_four_pass(tiny_log, train_cfg):
         np.testing.assert_allclose(got[k], want[k], rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_fit_loss_fn_override(tiny_log, train_cfg):
     """The bench pins reference objectives through fit(loss_fn=...)."""
     lcfg = L.LossConfig(beta=2.0)

@@ -108,7 +108,13 @@ def run(*, smoke: bool = False):
                               F.stage_costs(masks))
         params = C.init_params(cfg, jax.random.PRNGKey(0), scale=0.3)
         lcfg = L.LossConfig(beta=5.0)
-        buckets, iters = [(8, 64)], 3
+        # 20 iters, not 3: a 3-sample median on this container once read as
+        # a ~10% batched-vs-vmap regression that 900-sample timing showed
+        # to be pure wall-clock noise (ratio 1.00x, see ROADMAP). The smoke
+        # rows land in CI artifacts, so they must be quiet enough not to
+        # manufacture phantom signals; the asserted contract stays with the
+        # non-smoke (32, 256) bucket.
+        buckets, iters = [(8, 64)], 20
     else:
         params, cfg, lcfg = trained_cloes()
         buckets, iters = BUCKETS, 10

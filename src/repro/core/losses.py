@@ -14,6 +14,14 @@ the one stop-gradient variant L3's w_q-only penalty routing needs. NLL
 latency penalties (Eqs 14–16) are all cheap reductions of that tensor; the
 pre-refactor implementation re-scored the batch four times per L3 step.
 
+The deployed L3 objective goes one step further: by default it runs through
+kernels.ops.cascade_loss_fused, which emits those per-item reductions from
+the SAME VMEM pass that computes the scores (and bakes the penalty
+stop-gradient routing into its VJP), collapsing the score-then-many-small-
+reductions step graph into one kernel launch — see _loss_l3_fused. The
+unfused graph stays reachable through loss_l3's score_fn seam (the trainer
+benchmark's baselines).
+
 Engine-batch protocol: every batch term that does not depend on the params
 is a pure function of (log, lcfg), so the scan trainer precomputes it ONCE
 per fit (see trainer._engine_pack) and ships it in the batch under the
@@ -23,6 +31,9 @@ optional keys
     cost_w   (B, G)  Eq-8 cost weights: mask [* (1-y)] * (M_q / N_q)
     mn       (B,)    Eq-10 extrapolation factor M_q / N_q
     n_o_eff  (B,)    min(N_o, M_q) result-size floor
+    xc       (B, G, d_x+4)  the packed [x | y | mask | wgt | cost_w] item
+                     tensor itself — exactly what kernels.ops.
+                     cascade_loss_fused consumes (the fused L3 default)
 
 The losses use these when present and fall back to computing them from the
 raw batch (behavior/price/mask/y/m_q) otherwise — same float ops either
@@ -40,6 +51,7 @@ from repro.core import cascade as C
 from repro.core.pipeline import latency_from_counts
 from repro.data.synthetic import BEHAVIOR_CLICK, BEHAVIOR_PURCHASE
 from repro.kernels import ops as K
+from repro.kernels.cascade_loss.kernel import pack_items
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,9 +268,10 @@ def smooth_hinge(z: jax.Array, target: jax.Array, gamma: float) -> jax.Array:
 # Full objectives L1 (Eq 5), L2 (Eq 9), L3 (Eq 15) — one forward each.
 # ---------------------------------------------------------------------------
 
-def _l2_from_lp(params, lp, cfg: C.CascadeConfig, lcfg: LossConfig,
-                batch) -> jax.Array:
-    """L2 (Eq 9) given the shared forward's lp."""
+def _nll_cost_from_lp(lp, cfg: C.CascadeConfig, lcfg: LossConfig,
+                      batch) -> tuple[jax.Array, jax.Array]:
+    """(NLL, Eq-8 cost) from the shared forward's lp — the L2/L3 core,
+    using the engine batch's precomputed cost weights when present."""
     nll = nll_from_lp(lp, batch["y"], batch["mask"], _batch_wgt(batch, lcfg))
     cost_w = batch.get("cost_w")
     if cost_w is not None:                 # engine batch: weights precomputed
@@ -268,6 +281,13 @@ def _l2_from_lp(params, lp, cfg: C.CascadeConfig, lcfg: LossConfig,
         y_for_cost = batch["y"] if lcfg.cost_mask_positives else None
         cost = cost_from_lp(lp, cfg, batch["mask"], y_for_cost,
                             batch.get("m_q"))
+    return nll, cost
+
+
+def _l2_from_lp(params, lp, cfg: C.CascadeConfig, lcfg: LossConfig,
+                batch) -> jax.Array:
+    """L2 (Eq 9) given the shared forward's lp."""
+    nll, cost = _nll_cost_from_lp(lp, cfg, lcfg, batch)
     return nll + l2_penalty(params, lcfg) + lcfg.beta * cost
 
 
@@ -283,6 +303,73 @@ def loss_l2(params, cfg: C.CascadeConfig, lcfg: LossConfig, batch) -> jax.Array:
     return _l2_from_lp(params, lp, cfg, lcfg, batch)
 
 
+def _l3_tail(params, cfg: C.CascadeConfig, lcfg: LossConfig,
+             nll, cost, counts_pen, m_q, n_o) -> jax.Array:
+    """Assemble Eq 15 from the already-reduced terms: the UX hinges over the
+    per-query penalty counts + the shared NLL / l2 / Eq-8 cost core.
+
+    result-size floor: penalize E[Count_{q,T}] < N_o — but never ask for more
+    results than the query recalls (tail queries with M_q < N_o are exempt
+    up to their recall size). Eq 11 introduces one slack xi_i per *instance*,
+    so the penalty is (with equal-size query groups) a mean over queries;
+    the penalty unit is "missing results" — normalized by N_o so delta is
+    scale-free against the per-instance NLL. The latency cap
+    g'(T_l, Latency) penalizes Latency > T_l (unit: excess ms)."""
+    size_pen = smooth_hinge(counts_pen[:, -1], n_o, lcfg.gamma).mean()
+    lat = latency_from_counts_q(counts_pen, m_q, cfg, lcfg)
+    lat_pen = smooth_hinge(jnp.full_like(lat, lcfg.t_l), lat, lcfg.gamma).mean()
+    return (nll + l2_penalty(params, lcfg) + lcfg.beta * cost
+            + lcfg.delta * size_pen + lcfg.eps_latency * lat_pen)
+
+
+def _loss_l3_fused(params, cfg: C.CascadeConfig, lcfg: LossConfig,
+                   batch) -> jax.Array:
+    """L3 through ONE kernels.ops.cascade_loss_fused call.
+
+    The op computes the logits once and emits the three per-group partial
+    reductions (NLL terms, Eq-8 cost accumulators, Eq-10 keep counts) in
+    the same VMEM pass — everything left here is O(B*T). The Eq-15
+    stop-gradient routing (penalties adjust only w_q — see loss_l3) is
+    baked into the op's VJP: zq_pen is the gradient tap the counts stream
+    flows into, so the value-identical penalty-variant re-scoring pass of
+    the unfused graph disappears entirely.
+
+    Engine batches (trainer._engine_pack) arrive with the wgt/cost_w/mn/
+    n_o_eff columns precomputed AND the packed [x | y | mask | wgt |
+    cost_w] item tensor itself under "xc" — the kernel consumes it with
+    zero per-step re-packing. Raw batches derive the columns and pack here
+    (same float ops, value-identical)."""
+    x, q, y = batch["x"], batch["q"], batch["y"]
+    mask, m_q = batch["mask"], batch["m_q"]
+    mn = batch.get("mn")
+    if mn is None:
+        mn = m_q / jnp.maximum(mask.sum(axis=-1), 1.0)
+    n_o = batch.get("n_o_eff")
+    if n_o is None:
+        n_o = jnp.minimum(lcfg.n_o, m_q.astype(x.dtype))
+    xc = batch.get("xc")
+    if xc is None:
+        wgt = _batch_wgt(batch, lcfg)
+        if wgt is None:
+            wgt = jnp.ones_like(mask)
+        cost_w = batch.get("cost_w")
+        if cost_w is None:
+            base = mask * (1.0 - y) if lcfg.cost_mask_positives else mask
+            cost_w = base * mn[:, None]
+        xc = pack_items(x, y, mask, wgt, cost_w)
+    masks = jnp.asarray(cfg.masks, dtype=x.dtype)
+    w_eff = params["w_x"] * masks                                   # (T, d_x)
+    zq = q @ params["w_q"].T + params["b"]                          # (B, T)
+    zq_pen = q @ params["w_q"].T + jax.lax.stop_gradient(params["b"])
+    ll, cost_pp, cnt_pp = K.cascade_loss_fused(xc, w_eff, zq, zq_pen)
+    nll = -ll.sum() / jnp.maximum(mask.sum(), 1.0)
+    n = jnp.maximum(m_q.sum(), 1.0)
+    counts = jnp.concatenate([n[None], cost_pp[:-1]])               # (T,)
+    cost = (counts * jnp.asarray(cfg.t, dtype=ll.dtype)).sum() / n
+    counts_pen = mn[:, None] * cnt_pp                               # (B, T)
+    return _l3_tail(params, cfg, lcfg, nll, cost, counts_pen, m_q, n_o)
+
+
 def loss_l3(params, cfg: C.CascadeConfig, lcfg: LossConfig, batch,
             *, score_fn=None) -> jax.Array:
     """The deployed CLOES objective (Eq 15).
@@ -295,29 +382,27 @@ def loss_l3(params, cfg: C.CascadeConfig, lcfg: LossConfig, batch,
     global bias b, which the cost term then fights via w_x) saturates
     tail-query probabilities and inverts within-query ordering — so w_x and b
     are stop-gradient'd inside the penalty terms: per-query size/latency
-    control lives entirely in the per-recall-bucket weights w_q. Both
-    penalties reduce the SAME penalty-variant forward (lp_pen): the
-    pre-refactor code ran two extra expected_counts_per_query passes here.
+    control lives entirely in the per-recall-bucket weights w_q.
+
+    By default (score_fn=None) the whole objective runs through ONE
+    kernels.ops.cascade_loss_fused call (see _loss_l3_fused): the scoring
+    pass and every per-item reduction fuse into a single kernel with the
+    stop-gradient routing in its VJP. Passing score_fn pins the unfused
+    score-then-reduce graph below (both penalties reducing the shared
+    penalty-variant forward lp_pen) with that scorer — the trainer
+    benchmark's loop/vmap/batched baselines live behind this seam.
     """
+    if score_fn is None:
+        return _loss_l3_fused(params, cfg, lcfg, batch)
     x, q, mask, m_q = batch["x"], batch["q"], batch["mask"], batch["m_q"]
     lp, lp_pen = cascade_forward(params, cfg, x, q, penalty_variant=True,
                                  score_fn=score_fn)
     counts_pen = counts_from_lp(lp_pen, mask, m_q, batch.get("mn"))  # (B, T)
-    # result-size floor: penalize E[Count_{q,T}] < N_o — but never ask for more
-    # results than the query recalls (tail queries with M_q < N_o are exempt
-    # up to their recall size). Eq 11 introduces one slack xi_i per *instance*,
-    # so the penalty is (with equal-size query groups) a mean over queries;
-    # the penalty unit is "missing results" — normalized by N_o so delta is
-    # scale-free against the per-instance NLL.
     n_o = batch.get("n_o_eff")
     if n_o is None:
         n_o = jnp.minimum(lcfg.n_o, m_q.astype(x.dtype))
-    size_pen = smooth_hinge(counts_pen[:, -1], n_o, lcfg.gamma).mean()
-    lat = latency_from_counts_q(counts_pen, m_q, cfg, lcfg)
-    # latency cap: g'(T_l, Latency) penalizes Latency > T_l (unit: excess ms)
-    lat_pen = smooth_hinge(jnp.full_like(lat, lcfg.t_l), lat, lcfg.gamma).mean()
-    return (_l2_from_lp(params, lp, cfg, lcfg, batch)
-            + lcfg.delta * size_pen + lcfg.eps_latency * lat_pen)
+    nll, cost = _nll_cost_from_lp(lp, cfg, lcfg, batch)
+    return _l3_tail(params, cfg, lcfg, nll, cost, counts_pen, m_q, n_o)
 
 
 LOSSES = {"l1": loss_l1, "l2": loss_l2, "l3": loss_l3}

@@ -13,7 +13,12 @@ Two engines behind the same `fit()` API:
     is reproduced step for step (to f32 re-association noise).
     With a `mesh`, the per-step minibatch is sharded over the mesh's data
     axis via shard_map (batch shard + gradient mean; single-device meshes
-    degenerate to the plain scan).
+    degenerate to the plain scan). The packed item array is laid out
+    exactly as the fused L3 step kernel consumes it (kernels/cascade_loss),
+    so the default objective is one kernel call per step; with
+    TrainConfig.precision="bf16" the item array is stored in bfloat16
+    (f32 accumulation everywhere) and TrainConfig.loss_scale scales the
+    optimized objective.
   * ``engine="loop"`` — the original per-step Python loop (one jitted step
     per minibatch, seven host->device uploads each). Kept as the benchmark
     baseline and the trajectory-parity oracle.
@@ -35,6 +40,7 @@ from jax.sharding import Mesh, PartitionSpec as PS
 from repro.core import cascade as C
 from repro.core import losses as L
 from repro.data.synthetic import SearchLog
+from repro.kernels.cascade_loss.kernel import pack_items
 from repro.optim.sgd import apply_updates, momentum_sgd
 
 
@@ -48,6 +54,22 @@ class TrainConfig:
     seed: int = 0
     log_every: int = 200
     engine: str = "scan"       # scan | loop (see module docstring)
+    # Engine-pack storage precision (scan engine only). "bf16" stores the
+    # packed ITEM array (the (B, G, d_x+4) bulk of the device-resident log)
+    # in bfloat16, halving its footprint and the per-epoch permute traffic;
+    # every consumer accumulates in f32 (the losses/kernels up-cast
+    # in-kernel, _engine_unpack up-casts the minibatch view), so only the
+    # one storage rounding separates the trajectories. The small group
+    # array stays f32: m_q/mn/n_o_eff reach the thousands, where bf16's
+    # 8-bit mantissa would visibly shift the Eq-10/14 penalty targets.
+    precision: str = "f32"     # f32 | bf16
+    # Static loss-scale for the mixed-precision path: the scanned step
+    # optimizes loss * loss_scale and unscales grads before the update.
+    # Power-of-two scales are exact in f32 (the trajectory is invariant —
+    # locked by tests); plumbed for the Eq-8/Eq-16 reductions over 5e5-item
+    # hot queries, whose tiny per-item cost gradients underflow first when
+    # cotangents ever ride a 16-bit backward.
+    loss_scale: float = 1.0
 
 
 def epoch_steps(n_groups: int, batch_groups: int) -> tuple[int, int]:
@@ -135,14 +157,24 @@ def train_step(params, opt_state, batch, cfg: C.CascadeConfig,
 # the loop engine bit for bit.
 # ---------------------------------------------------------------------------
 
-def _engine_pack(log: SearchLog,
-                 lcfg: L.LossConfig) -> tuple[jax.Array, jax.Array]:
+def _engine_pack(log: SearchLog, lcfg: L.LossConfig,
+                 precision: str = "f32") -> tuple[jax.Array, jax.Array]:
     """Upload the log once, with param-independent loss terms precomputed.
 
     Returns (item (B, G, d_x+4), group (B, d_q+3)):
       item  = [x | y | mask | wgt | cost_w]
       group = [q | m_q | mn | n_o_eff]
+
+    The item layout is exactly the packed tensor kernels.ops.
+    cascade_loss_fused consumes — the fused L3 step scores and reduces it
+    without any per-step re-packing. With precision="bf16" the item array
+    is stored in bfloat16 (see TrainConfig.precision); the binary y/mask
+    columns and the one-hot x registry features are bf16-exact, so the
+    rounding touches only the dense feature/wgt/cost_w values.
     """
+    if precision not in ("f32", "bf16"):
+        raise ValueError(f"unknown engine precision: {precision!r} "
+                         "(expected 'f32' or 'bf16')")
     d = _log_arrays(log)
     wgt = L.importance_weights(d["behavior"], d["price"], lcfg)
     n_q = jnp.maximum(d["mask"].sum(-1), 1.0)
@@ -151,18 +183,27 @@ def _engine_pack(log: SearchLog,
               else d["mask"])
     cost_w = base_w * mn[:, None]
     n_o_eff = jnp.minimum(lcfg.n_o, d["m_q"])
-    item = jnp.concatenate(
-        [d["x"], d["y"][..., None], d["mask"][..., None],
-         wgt[..., None], cost_w[..., None]], axis=-1)
+    item = pack_items(d["x"], d["y"], d["mask"], wgt, cost_w)
     group = jnp.concatenate(
         [d["q"], d["m_q"][:, None], mn[:, None], n_o_eff[:, None]], axis=-1)
+    if precision == "bf16":
+        item = item.astype(jnp.bfloat16)
     return item, group
 
 
 def _engine_unpack(item: jax.Array, group: jax.Array,
                    d_x: int, d_q: int) -> dict[str, jax.Array]:
-    """Packed minibatch -> the engine-batch dict the losses consume."""
+    """Packed minibatch -> the engine-batch dict the losses consume.
+
+    Up-casts to f32 first (a no-op for f32 packs): storage precision is the
+    pack's concern, every downstream reduction accumulates in f32. The
+    packed item tensor rides along under "xc" — it is exactly the layout
+    kernels.ops.cascade_loss_fused consumes, so the fused L3 step scores
+    and reduces it without re-packing."""
+    item = item.astype(jnp.float32)
+    group = group.astype(jnp.float32)
     return {
+        "xc": item,
         "x": item[..., :d_x], "y": item[..., d_x],
         "mask": item[..., d_x + 1], "wgt": item[..., d_x + 2],
         "cost_w": item[..., d_x + 3],
@@ -172,27 +213,39 @@ def _engine_unpack(item: jax.Array, group: jax.Array,
 
 
 def _make_epoch_fn(cfg: C.CascadeConfig, lcfg: L.LossConfig, loss_fn,
-                   opt_update, mesh: Mesh | None, unravel):
+                   opt_update, mesh: Mesh | None, unravel,
+                   loss_scale: float = 1.0):
     """Build the jitted epoch function:
     (theta, opt_state, item, group, idx (steps, batch_groups)) ->
     (theta, opt_state, losses (steps,)). theta is the raveled param vector
-    (unravel maps it back to the param dict for the loss)."""
+    (unravel maps it back to the param dict for the loss). loss_scale
+    scales the optimized objective and unscales grads/reported losses
+    before the update (see TrainConfig.loss_scale)."""
 
     def epoch(theta, opt_state, item, group, idx):
         steps, bg = idx.shape
         # Permute ON DEVICE, once per epoch: one gather per packed array,
         # reshaped to (steps, batch_groups, ...) and consumed as the
         # scan's xs — each step reads its minibatch by dynamic slice.
-        # Costs one transient copy of the log.
+        # Costs one transient copy of the log. A bf16 pack is gathered in
+        # bf16 (the halved permute traffic) and up-cast HERE, once per
+        # epoch — a per-step convert would break the step's loop fusions
+        # (measured 3x slower on CPU).
         flat = idx.reshape(-1)
-        xs = (item[flat].reshape(steps, bg, *item.shape[1:]),
-              group[flat].reshape(steps, bg, *group.shape[1:]))
+        xs = (item[flat].reshape(steps, bg, *item.shape[1:])
+              .astype(jnp.float32),
+              group[flat].reshape(steps, bg, *group.shape[1:])
+              .astype(jnp.float32))
 
         def step(carry, mb):
             theta, opt_state = carry
             batch = _engine_unpack(mb[0], mb[1], cfg.d_x, cfg.d_q)
             loss, grads = jax.value_and_grad(
-                lambda th: loss_fn(unravel(th), cfg, lcfg, batch))(theta)
+                lambda th: loss_fn(unravel(th), cfg, lcfg, batch)
+                * loss_scale)(theta)
+            if loss_scale != 1.0:
+                loss = loss / loss_scale
+                grads = grads / loss_scale      # theta rides as one ravel
             if mesh is not None:
                 # data parallelism: each shard computed its loss on its
                 # slice of the minibatch groups; average grads (and the
@@ -248,6 +301,11 @@ def fit(log: SearchLog, cfg: C.CascadeConfig, lcfg: L.LossConfig,
 
     if tcfg.engine == "loop":
         assert mesh is None, "the loop engine has no data-parallel path"
+        if tcfg.precision != "f32" or tcfg.loss_scale != 1.0:
+            raise ValueError(
+                "precision/loss_scale are scan-engine features (the loop "
+                "engine is the plain-f32 baseline/oracle); got "
+                f"precision={tcfg.precision!r}, loss_scale={tcfg.loss_scale}")
         step = 0
         for epoch in range(tcfg.epochs):
             for batch in batches(log, tcfg.batch_groups, tcfg.seed + epoch):
@@ -269,10 +327,11 @@ def fit(log: SearchLog, cfg: C.CascadeConfig, lcfg: L.LossConfig,
     steps_per_epoch, _ = epoch_steps(B, tcfg.batch_groups)
     if steps_per_epoch == 0:
         return params
-    item, group = _engine_pack(log, lcfg)           # ONE upload per fit
+    item, group = _engine_pack(log, lcfg, tcfg.precision)  # ONE upload/fit
     theta, unravel = ravel_pytree(params)
     opt_state = opt.init(theta)                     # momentum on the ravel
-    epoch_fn = _make_epoch_fn(cfg, lcfg, loss_fn, opt.update, mesh, unravel)
+    epoch_fn = _make_epoch_fn(cfg, lcfg, loss_fn, opt.update, mesh, unravel,
+                              tcfg.loss_scale)
     for epoch in range(tcfg.epochs):
         idx = jnp.asarray(
             _epoch_perm(B, tcfg.batch_groups, tcfg.seed + epoch))

@@ -1,0 +1,161 @@
+"""Pure-jnp oracle for the fused cascade training-step reductions.
+
+Given the packed item tensor xc = [x | y | mask | wgt | cost_w] (the
+trainer's engine-batch layout — see kernel.py), the stage weights and the
+per-group biases, computes the three per-group partial reductions of the
+L3 objective in one forward:
+
+    ll[b]         = sum_g wgt*mask * (y * lpc_T + (1-y) * log1p(-exp(lpc_T)))
+    cost_pp[t]    = sum_bg cost_w * exp(lp_t)
+    cnt_pp[b, t]  = sum_g  mask   * exp(lp_t)
+
+with lp the (B, G, T) cumulative log pass-probabilities (Eqs 1-2, 6) and
+lpc_T = min(lp[..., -1], -1e-7) the NLL's clamped final stage — Eq 4 only
+ever reads the last stage, so the NLL partial is a per-group scalar.
+
+This is both the parity oracle for the Pallas kernel and the production
+non-TPU path, and it is shaped by two CPU measurements (profiler traces of
+the scanned L3 step at the default TrainConfig):
+
+  * a custom-VJP boundary is ~20% SLOWER than plain autodiff here — XLA
+    fuses the backward into the forward's loop fusions and a VJP boundary
+    (residual materialization + a separate backward pass) breaks exactly
+    that — so unlike the kernel the ref is natively autodiff-able;
+  * the log-space chain (softplus-based log_sigmoid + exp back out of log
+    space) dominated the step: XLA CPU duplicates transcendental producers
+    into every consumer fusion, so the ref computes the pass-probabilities
+    DIRECTLY in probability space — one sigmoid, an unrolled per-stage
+    product (plain multiplies, polynomial autodiff, no cumprod-VJP
+    division), with the NLL's log pass-probability accumulated as a sum
+    of per-stage logs of the same sigmoids (underflow-safe, see the loop
+    comment) and one log1p on the (B, G) final stage. Values match the
+    kernel's log-space formulation to a few f32 ulp (log(sigmoid) vs
+    log_sigmoid); the loss-level parity contract is relative 1e-6 / 1e-5,
+    locked by tests.
+
+The Eq-15 stop-gradient routing is built in algebraically instead of via a
+second scoring pass:
+
+    jac_k   = stop_grad(1 - s_k)                     # d lp_t / d zq_k, k<=t
+    dzp     = zq_pen - stop_grad(zq_pen)             # value 0, grad tap
+    pp_pen_t = stop_grad(pp_t) * (1 + sum_{k<=t} jac_k * dzp_k)
+
+pp_pen equals pp bit for bit (x * 1.0 is exact), while its derivative
+w.r.t. zq_pen_k is pp_t * sigmoid(-logit_k) * 1[k<=t] — the EXACT Jacobian
+of the pass-probabilities in zq (first-order in the zero-valued dzp), so
+autodiff through cnt_pp reproduces the closed-form penalty stream below to
+f32 rounding while touching neither w_eff nor zq.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cascade_loss.kernel import LOG_P_CLAMP, N_DATA_COLS
+
+
+def _cols(xc):
+    d_x = xc.shape[-1] - N_DATA_COLS
+    xf = xc.astype(jnp.float32)
+    y, mask, wgt, cost_w = [xf[..., d_x + i] for i in range(N_DATA_COLS)]
+    return xf[..., :d_x], y, mask, wgt, cost_w
+
+
+def cascade_loss_ref(xc: jax.Array, w_eff: jax.Array, zq: jax.Array,
+                     zq_pen: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """xc: (B, G, d_x+4), w_eff: (T, d_x), zq/zq_pen: (B, T) ->
+    (ll (B,), cost_pp (T,), cnt_pp (B, T)), all f32. The Eq-8 cost
+    accumulator is a GLOBAL per-stage sum (its only consumer, Eq 8, sums
+    over the batch anyway); the Eq-10 counts stay per-group for the
+    per-query penalties.
+
+    zq_pen must equal zq in value (the gradient-routing contract of
+    ops.cascade_loss_fused); with zq_pen=None the counts stream simply
+    taps zq like everything else."""
+    x, y, mask, wgt, cost_w = _cols(xc)                        # (B, G) cols
+    logits = (jnp.einsum("bgd,td->bgt", x, w_eff.astype(jnp.float32))
+              + zq.astype(jnp.float32)[:, None, :])
+    s = jax.nn.sigmoid(logits)                                 # (B, G, T)
+    t = s.shape[-1]
+    # The NLL's log pass-probability is accumulated as a SUM of per-stage
+    # logs (not log of the product): the product underflows f32 at a TOTAL
+    # of ~-87 nats — reachable cascades — where log(pp) would go -inf and
+    # poison the NLL with 0 * -inf = NaN; per-stage logs push the horizon
+    # to -87 nats PER STAGE, with the sigmoid floored at the smallest
+    # normal f32 so the value stays finite (and 1/s in the log backward
+    # cannot overflow) even beyond it.
+    ls = jnp.log(jnp.maximum(s, jnp.finfo(jnp.float32).tiny))  # (B, G, T)
+    if zq_pen is None:
+        dzp = None
+    else:
+        dzp = (zq_pen.astype(jnp.float32)
+               - jax.lax.stop_gradient(zq_pen.astype(jnp.float32)))
+    # Unrolled per-stage cumulative products, kept as (B, G) columns so the
+    # whole chain stays in one 2-D elementwise fusion per stage; each
+    # stage's exp-weighted partials reduce straight to scalars / (B,) rows.
+    pp_k = None
+    lp_sum = None
+    jac = None
+    cost_cols, cnt_cols = [], []
+    for k in range(t):
+        s_k = s[..., k]
+        pp_k = s_k if pp_k is None else pp_k * s_k
+        lp_sum = ls[..., k] if lp_sum is None else lp_sum + ls[..., k]
+        cost_cols.append((pp_k * cost_w).sum())
+        if dzp is None:
+            cnt_cols.append((pp_k * mask).sum(axis=1))
+        else:
+            # exact-Jacobian routing — see the module docstring
+            d_jac = jax.lax.stop_gradient(1.0 - s_k) * dzp[:, k:k + 1]
+            jac = d_jac if jac is None else jac + d_jac
+            pp_pen_k = jax.lax.stop_gradient(pp_k) * (1.0 + jac)
+            cnt_cols.append((pp_pen_k * mask).sum(axis=1))
+    lpc = jnp.minimum(lp_sum, LOG_P_CLAMP)                     # (B, G)
+    ll = (wgt * mask) * (y * lpc + (1.0 - y) * jnp.log1p(-jnp.exp(lpc)))
+    return (ll.sum(axis=1), jnp.stack(cost_cols),
+            jnp.stack(cnt_cols, axis=-1))
+
+
+def cascade_loss_bwd_ref(xc: jax.Array, w_eff: jax.Array, zq: jax.Array,
+                         g_ll: jax.Array, g_cost: jax.Array, g_cnt: jax.Array
+                         ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                    jax.Array]:
+    """Closed-form backward — the XLA oracle the Pallas backward kernel
+    mirrors (see kernel.py for the derivation and the gradient contract),
+    and the reference the routed-autodiff path above is tested against.
+
+    g_ll: (B,) cotangent of the NLL partial; g_cost: (T,) and g_cnt:
+    (B, T) cotangents of the Eq-8/Eq-10 accumulators.
+    Returns (dxc (B, G, d_x+4), dw_eff (T, d_x), dzq (B, T),
+    dzq_pen (B, T)), all f32. The main stream (NLL + cost) flows to
+    dw_eff/dzq; the penalty stream (counts) only to dzq_pen; dxc carries
+    both (its data columns are structurally zero)."""
+    x, y, mask, wgt, cost_w = [a if i == 0 else a[..., None]
+                               for i, a in enumerate(_cols(xc))]
+    wf = w_eff.astype(jnp.float32)
+    logits = jnp.einsum("bgd,td->bgt", x, wf) + zq.astype(jnp.float32)[:, None, :]
+    lp = jnp.cumsum(jax.nn.log_sigmoid(logits), axis=-1)
+    pp = jnp.exp(lp)
+    t = lp.shape[-1]
+    lpc = jnp.minimum(lp[..., -1:], LOG_P_CLAMP)
+    ppc = jnp.exp(lpc)
+    dll = (wgt * mask) * (y - (1.0 - y) * ppc / (1.0 - ppc))   # (B, G, 1)
+    # the NLL stream only taps the final stage
+    g_nll = jnp.where(lp[..., -1:] <= LOG_P_CLAMP,
+                      g_ll[:, None, None] * dll, 0.0)          # (B, G, 1)
+    pad_nll = jnp.pad(g_nll, ((0, 0), (0, 0), (t - 1, 0)))
+    g_lp_main = pad_nll + g_cost[None, None, :] * pp * cost_w
+    g_lp_pen = g_cnt[:, None, :] * pp * mask
+    sig = jax.nn.sigmoid(-logits)
+
+    def back(g_lp):
+        gc = g_lp.sum(axis=-1, keepdims=True) - jnp.cumsum(g_lp, -1) + g_lp
+        return gc * sig
+
+    gm, gp = back(g_lp_main), back(g_lp_pen)                  # (B, G, T)
+    dx = jnp.einsum("bgt,td->bgd", gm + gp, wf)
+    dxc = jnp.pad(dx, ((0, 0), (0, 0), (0, N_DATA_COLS)))
+    dw = jnp.einsum("bgt,bgd->td", gm, x)
+    return dxc, dw, gm.sum(axis=1), gp.sum(axis=1)

@@ -19,6 +19,11 @@ import jax
 
 from repro.kernels.cascade_filter.kernel import cascade_filter as _cascade_filter
 from repro.kernels.cascade_filter.ref import cascade_filter_ref
+from repro.kernels.cascade_loss.kernel import (
+    cascade_loss as _cascade_loss,
+    cascade_loss_bwd as _cascade_loss_bwd)
+from repro.kernels.cascade_loss.ref import (cascade_loss_bwd_ref,
+                                            cascade_loss_ref)
 from repro.kernels.cascade_score.kernel import (
     cascade_score as _cascade_score,
     cascade_score_batched as _cascade_score_batched,
@@ -91,6 +96,70 @@ def _cascade_score_batched_bwd_rule(interpret, res, g):
 
 _cascade_score_batched_pallas.defvjp(_cascade_score_batched_fwd,
                                      _cascade_score_batched_bwd_rule)
+
+
+# ---------------------------------------------------------------------------
+# cascade_loss_fused — the L3 training-step reduction op. The Pallas paths
+# carry a custom VJP (autodiff cannot see through pallas_call) whose
+# backward is one fused recompute pass in VMEM with the Eq-15 stop-gradient
+# routing hand-built in: the counts (penalty) cotangent stream flows to
+# zq_pen only. The XLA ref rides plain autodiff — same policy (and same
+# measured reason: ~20% slower L3 steps with a VJP boundary, which blocks
+# XLA from fusing the backward into the forward's loop fusions) as the
+# plain scorer — with the identical routing expressed algebraically inside
+# the ref (exact-Jacobian zq_pen tap; see kernels/cascade_loss/ref.py).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _cascade_loss_pallas(interpret, xc, w_eff, zq, zq_pen):
+    del zq_pen  # value-identical to zq by contract; a gradient tap only
+    return _cascade_loss(xc, w_eff, zq, d_x=w_eff.shape[1],
+                         interpret=interpret)
+
+
+def _cascade_loss_fwd(interpret, xc, w_eff, zq, zq_pen):
+    return (_cascade_loss_pallas(interpret, xc, w_eff, zq, zq_pen),
+            (xc, w_eff, zq))
+
+
+def _cascade_loss_bwd_rule(interpret, res, g):
+    xc, w_eff, zq = res
+    g_ll, g_cost, g_cnt = g
+    return _cascade_loss_bwd(xc, w_eff, zq, g_ll, g_cost, g_cnt,
+                             d_x=w_eff.shape[1], interpret=interpret)
+
+
+_cascade_loss_pallas.defvjp(_cascade_loss_fwd, _cascade_loss_bwd_rule)
+
+
+def cascade_loss_fused(xc, w_eff, zq, zq_pen=None, *,
+                       interpret: bool | None = None):
+    """Fused L3 training-step reductions: xc (B, G, d_x+4) packed items
+    ([x | y | mask | wgt | cost_w] — the trainer's engine-batch layout),
+    w_eff (T, d_x), zq (B, T) -> (ll (B,), cost_pp (T,), cnt_pp (B, T)).
+
+    One VMEM pass computes the logits and emits the per-group partials of
+    the NLL (Eq 4/17), the Eq-8 expected-cost accumulators and the Eq-10
+    expected keep counts — see kernels/cascade_loss/kernel.py for the
+    layout/padding contract and the reduction definitions.
+
+    zq_pen MUST equal zq in value (it is the same query bias with the Eq-15
+    stop-gradients applied); it exists purely as a gradient-routing tap: the
+    counts (penalty) cotangent stream flows into zq_pen, the NLL + cost
+    streams into zq and w_eff. Defaults to zq itself (no routing split).
+    Differentiable on every path — custom VJP with a fused Pallas backward
+    kernel on TPU/interpret, plain autodiff through the routing-aware XLA
+    reference elsewhere; the y/mask/wgt/cost_w data columns are treated as
+    constants."""
+    _require_ranks("cascade_loss_fused", xc=(xc, 3), w_eff=(w_eff, 2),
+                   zq=(zq, 2),
+                   **({} if zq_pen is None else {"zq_pen": (zq_pen, 2)}))
+    if interpret is None:
+        if _auto_interpret():
+            return cascade_loss_ref(xc, w_eff, zq, zq_pen)
+        interpret = False
+    return _cascade_loss_pallas(interpret, xc, w_eff, zq,
+                                zq if zq_pen is None else zq_pen)
 
 
 def cascade_score(x, w_eff, zq, *, interpret: bool | None = None):
@@ -168,7 +237,8 @@ def swa_decode(q, k, v, cache_len, *, window: int = NO_WINDOW,
     return _swa_decode(q, k, v, cache_len, window=window, interpret=interpret)
 
 
-__all__ = ["cascade_score", "cascade_score_batched",
+__all__ = ["cascade_loss_fused", "cascade_loss_ref", "cascade_loss_bwd_ref",
+           "cascade_score", "cascade_score_batched",
            "cascade_score_batched_ref", "cascade_score_fm",
            "cascade_score_ref", "cascade_score_bwd_ref", "cascade_filter",
            "cascade_filter_ref", "swa_decode", "swa_decode_ref", "NO_WINDOW"]

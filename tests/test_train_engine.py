@@ -11,6 +11,8 @@ Pins three contracts:
       from its single forward as the old four-pass version.
 """
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -144,7 +146,12 @@ def test_single_forward_value_and_grad_parity(setup, loss,
                                                       batch)
     v_ref, g_ref = jax.value_and_grad(REF_LOSSES[loss])(params, cfg, lcfg,
                                                         batch)
-    assert abs(float(v_new) - float(v_ref)) <= 1e-6
+    # 1e-6 RELATIVE: the beta-weighted L3 sits at O(100), where 1e-6
+    # relative is about one f32 ulp — the fused-kernel L3 (per-group
+    # partial sums, probability-space pass-probs on the CPU ref) is
+    # reassociated float math, not a different objective.
+    assert abs(float(v_new) - float(v_ref)) <= 1e-6 * max(1.0,
+                                                          abs(float(v_ref)))
     for k in params:
         np.testing.assert_allclose(np.asarray(g_new[k]), np.asarray(g_ref[k]),
                                    rtol=1e-5, atol=1e-5)
@@ -361,6 +368,73 @@ def test_evaluate_single_forward_matches_four_pass(tiny_log, train_cfg):
     assert got.keys() == want.keys()
     for k in want:
         np.testing.assert_allclose(got[k], want[k], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# (d) bf16 engine pack + loss scale (TrainConfig.precision / .loss_scale).
+# ---------------------------------------------------------------------------
+
+def test_bf16_engine_pack_round_trip(tiny_log, train_cfg):
+    """bf16 packs store the ITEM array in bfloat16 (group stays f32) and
+    unpack to f32 within bf16 rounding of the f32 pack; binary y/mask
+    columns survive exactly."""
+    lcfg = L.LossConfig(beta=2.0)
+    item32, group32 = T._engine_pack(tiny_log, lcfg, "f32")
+    item16, group16 = T._engine_pack(tiny_log, lcfg, "bf16")
+    assert item32.dtype == jnp.float32 and item16.dtype == jnp.bfloat16
+    assert group16.dtype == jnp.float32
+    d_x = train_cfg.d_x
+    b32 = T._engine_unpack(item32, group32, d_x, train_cfg.d_q)
+    b16 = T._engine_unpack(item16, group16, d_x, train_cfg.d_q)
+    assert all(v.dtype == jnp.float32 for v in b16.values())
+    np.testing.assert_array_equal(np.asarray(b16["y"]), np.asarray(b32["y"]))
+    np.testing.assert_array_equal(np.asarray(b16["mask"]),
+                                  np.asarray(b32["mask"]))
+    for k in ["x", "wgt", "cost_w"]:
+        np.testing.assert_allclose(np.asarray(b16[k]), np.asarray(b32[k]),
+                                   rtol=8e-3, atol=1e-6)  # bf16: 8-bit mant.
+    for k in ["q", "m_q", "mn", "n_o_eff"]:                # group stays f32
+        np.testing.assert_array_equal(np.asarray(b16[k]), np.asarray(b32[k]))
+
+
+def test_engine_pack_rejects_unknown_precision(tiny_log):
+    with pytest.raises(ValueError, match="unknown engine precision"):
+        T._engine_pack(tiny_log, L.LossConfig(), "fp8")
+
+
+def test_loop_engine_rejects_mixed_precision(tiny_log, train_cfg):
+    for kw in [{"precision": "bf16"}, {"loss_scale": 128.0}]:
+        with pytest.raises(ValueError, match="scan-engine features"):
+            T.fit(tiny_log, train_cfg, L.LossConfig(),
+                  T.TrainConfig(engine="loop", epochs=1, **kw))
+
+
+@pytest.mark.slow
+def test_loss_scale_invariance(tiny_log, train_cfg):
+    """Power-of-two loss scales are exact in f32: the scanned trajectory
+    must be BITWISE identical to loss_scale=1."""
+    lcfg = L.LossConfig(beta=2.0)
+    base = T.TrainConfig(loss="l3", epochs=2, lr=0.01, batch_groups=32)
+    p1 = T.fit(tiny_log, train_cfg, lcfg, base)
+    p1024 = T.fit(tiny_log, train_cfg, lcfg,
+                  dataclasses.replace(base, loss_scale=1024.0))
+    for k in p1:
+        np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p1024[k]))
+
+
+@pytest.mark.slow
+def test_bf16_fit_tracks_f32(tiny_log, train_cfg):
+    """bf16 storage + f32 accumulation: only the one storage rounding
+    separates the trajectories, so short fits stay within ~1e-3."""
+    lcfg = L.LossConfig(beta=2.0)
+    base = T.TrainConfig(loss="l3", epochs=2, lr=0.01, batch_groups=32)
+    p32 = T.fit(tiny_log, train_cfg, lcfg, base)
+    p16 = T.fit(tiny_log, train_cfg, lcfg,
+                dataclasses.replace(base, precision="bf16"))
+    for k in p32:
+        assert np.all(np.isfinite(np.asarray(p16[k])))
+        np.testing.assert_allclose(np.asarray(p32[k]), np.asarray(p16[k]),
+                                   rtol=0, atol=2e-3)
 
 
 @pytest.mark.slow

@@ -74,25 +74,83 @@ def run():
         "the 2-stage system needs degradation at 3x QPS (the paper's motivation)"
     assert saved > 0.30, "expect large CPU saving at beta=10 (paper: 45%; ours larger — cheap tier more informative on synthetic log)"
 
-    # Measured headroom of the fused serving pipeline under the peak-load
-    # scenario: items/sec of the jitted score+filter path on the beta=10
-    # cascade. 3x QPS is 3x batches through the same warm pipeline, so the
-    # throughput here IS the 3x-day serving rate per host.
-    from benchmarks.common import time_call
-    from repro.serving.cascade_server import CascadeServer
+    # Peak-load behavior ON THE SERVING ENGINE: sweep offered load through
+    # saturation on the streaming CascadeSession (open-loop Poisson
+    # arrivals, bounded admission, degradation watermarks). Below capacity
+    # nothing sheds; past it the bounded queue sheds/degrades instead of
+    # growing without bound — the fig-5 claim as request-lifecycle
+    # behavior, not just a CPU-utilization model.
+    from repro.serving.batching import RankRequest
+    from repro.serving.loadgen import run_open_loop
+    from repro.serving.session import (CascadeSession, DegradePolicy,
+                                       FlushPolicy, ServingConfig)
     params10, cfg10, lcfg10 = trained_cloes(beta=10.0)
-    srv = CascadeServer(params10, cfg10, lcfg10, use_fused_kernel=True)
-    b, g = 32, te.x.shape[1]
-    batch = {"x": te.x[:b].astype(np.float32), "q": te.q[:b].astype(np.float32),
-             "mask": te.mask[:b].astype(np.float32),
-             "m_q": te.m_q[:b].astype(np.float32)}
-    srv.rank_batch(batch)                       # warm the (b, g) shape
-    us = time_call(lambda: srv.rank_batch(batch)["scores"])
-    # count only valid items — the synthetic groups are mask-padded
-    ips = float(batch["mask"].sum()) / (us / 1e6)
-    emit("fig5/fused_pipeline_throughput", us,
-         f"items_per_sec={ips:.0f};groups_per_sec={b/(us/1e6):.0f};"
-         f"bucket=({b},{g});note=3xQPS=3x_batches_same_rate")
+    g = te.x.shape[1]
+    bg = 16
+
+    def make_session():
+        return CascadeSession(
+            params10, cfg10, lcfg10,
+            scfg=ServingConfig(
+                plan="filter", group_buckets=(g,), batch_groups=bg,
+                max_queue=4 * bg, flush=FlushPolicy(max_wait_ms=5.0),
+                degrade=DegradePolicy(high_watermark=2 * bg,
+                                      low_watermark=bg // 2)))
+
+    def make_reqs(n, seed):
+        r = np.random.default_rng(seed)
+        picks = r.integers(0, te.x.shape[0], n)
+        return [RankRequest(request_id=i,
+                            q_feat=te.q[qi].astype(np.float32),
+                            item_feats=te.x[qi].astype(np.float32),
+                            m_q=int(te.m_q[qi]))
+                for i, qi in enumerate(picks)]
+
+    # Calibrate this host's service capacity on the LIVE path (submit ->
+    # step: packing + jitted pipeline + response construction), not the
+    # bare rank_batch — the lifecycle overhead is part of what saturates.
+    cal = make_session()
+    cal.warmup()
+    dts = []
+    for rep in range(6):
+        for r in make_reqs(bg, seed=100 + rep):
+            cal.submit(r, now_ms=0.0)
+        t0 = time.perf_counter()
+        while cal.step(0.0):
+            pass
+        dts.append(time.perf_counter() - t0)
+    us_chunk = float(np.median(dts[1:])) * 1e6  # skip the first (cache warm)
+    cap_qps = bg / (us_chunk / 1e6)
+    emit("fig5/session_capacity", us_chunk,
+         f"chunk_qps_capacity={cap_qps:.0f};bucket=({bg},{g});"
+         f"note=live_submit_step_path")
+
+    # Wide levels: sub-saturation, the knee, and deep overload. Partial
+    # batches serve MORE expensively per request than full ones (max_wait
+    # flushes), so moderate multiples of full-chunk capacity are noisy on
+    # this shared box — the sweep brackets saturation instead of probing
+    # its edge.
+    shed_by_mult = {}
+    for mult in (0.25, 1.0, 4.0):
+        ses = make_session()
+        ses.warmup()
+        res = run_open_loop(ses, make_reqs(240, seed=17), mult * cap_qps,
+                            deadline_ms=None, seed=3)
+        shed_by_mult[mult] = res.shed_frac
+        assert res.unresolved == 0, \
+            f"x{mult}: {res.unresolved} futures never resolved"
+        emit(f"fig5/openloop_x{mult}", res.serve_s * 1e6,
+             f"offered_qps={res.offered_qps:.0f};"
+             f"achieved_qps={res.achieved_qps:.0f};"
+             f"shed_frac={res.shed_frac:.3f};p95_ms={res.pct(95):.2f};"
+             f"p50_ms={res.pct(50):.2f};"
+             f"degraded_frac={res.degraded/max(res.completed,1):.3f}")
+    # 4x the measured capacity must overload the bounded queue: the engine
+    # sheds (graceful, every future resolved) instead of queueing forever.
+    assert shed_by_mult[4.0] > 0.1, (
+        "expected load-shedding at 4x measured capacity; shed fractions: "
+        f"{shed_by_mult}")
+    assert shed_by_mult[4.0] >= shed_by_mult[0.25], shed_by_mult
     return rows
 
 

@@ -99,7 +99,11 @@ def _vmap_score_pipeline(cfg, lcfg):
     return pipeline
 
 
-def run(*, smoke: bool = False):
+def run(*, smoke: bool = False, plan: str = "filter"):
+    # Resolve the serving plan through the one registry BEFORE any
+    # training/compute — the bench rejects an unknown plan with the same
+    # error as run_cascade/CascadeServer/CascadeSession.
+    P.resolve_plan(plan)
     if smoke:
         # untrained params: throughput does not depend on weight values,
         # and the smoke leg must not pay a multi-epoch training warmup
@@ -120,7 +124,7 @@ def run(*, smoke: bool = False):
         buckets, iters = BUCKETS, 10
     # no srv.warmup(): time_call's own warmup compiles the one shape each
     # variant uses — warming all 18 batcher buckets would only add wall time
-    srv = CascadeServer(params, cfg, lcfg, fused="filter")
+    srv = CascadeServer(params, cfg, lcfg, fused=plan)
 
     @partial(jax.jit, static_argnames=())
     def batched_kernel_pipeline(p, x, q, mask, m_q):
@@ -159,7 +163,8 @@ def run(*, smoke: bool = False):
 
     report = {
         "config": {"buckets": [list(bg) for bg in buckets], "iters": iters,
-                   "smoke": smoke, "backend": jax.default_backend()},
+                   "smoke": smoke, "plan": plan,
+                   "backend": jax.default_backend()},
         "variants": {f"b{b}_g{g}": {name: {"us_per_call": us,
                                            "items_per_sec": b * g / (us / 1e6)}
                                     for name, us in r.items()}
@@ -189,8 +194,11 @@ def main() -> None:
                     help="small bucket, untrained params, no assertions "
                     "(CI leg: asserts the bench runs and writes "
                     f"{BENCH_JSON})")
+    ap.add_argument("--plan", default="filter",
+                    help="pipeline plan for the server row "
+                    "(core.pipeline.PLANS entry)")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, plan=args.plan)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """End-to-end serving driver (the paper's kind of system): a trained CLOES
-cascade serving batched ranking requests, with one of the assigned
-architectures as the expensive neural final stage.
+cascade behind the streaming CascadeSession API — open-loop Poisson
+arrivals with per-request deadlines, bounded admission, and one of the
+assigned architectures as the expensive neural final stage (skipped under
+degraded mode when the queue backs up).
 
     PYTHONPATH=src python examples/cascade_serving.py [--arch qwen3-8b]
 """
@@ -20,7 +22,10 @@ from repro.core import metrics as M
 from repro.core import trainer as T
 from repro.data import LogConfig, generate_log
 from repro.serving.batching import RankRequest
-from repro.serving.cascade_server import CascadeServer, NeuralScorer
+from repro.serving.cascade_server import NeuralScorer
+from repro.serving.loadgen import run_open_loop
+from repro.serving.session import (CascadeSession, DegradePolicy,
+                                   FlushPolicy, ServingConfig)
 
 
 def main():
@@ -28,6 +33,8 @@ def main():
     ap.add_argument("--arch", default="starcoder2-3b",
                     help="assigned arch used (smoke-sized) as final stage")
     ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--qps", type=float, default=300.0)
+    ap.add_argument("--deadline-ms", type=float, default=130.0)
     args = ap.parse_args()
 
     log = generate_log(LogConfig(n_queries=600, seed=1))
@@ -36,9 +43,17 @@ def main():
                               tcfg=T.TrainConfig(loss="l3", epochs=4, lr=0.01))
     ncfg = dataclasses.replace(CFG.get_smoke(args.arch), dtype=jnp.float32)
     neural = NeuralScorer.create(ncfg, jax.random.PRNGKey(7))
-    srv = CascadeServer(params, cfg, neural_stage=neural)
+    # watermarks sized so an arrival burst that outruns the neural stage
+    # visibly enters degraded mode (skip the neural stage, tighten m_q)
+    # and recovers once the queue drains
+    ses = CascadeSession(
+        params, cfg, neural_stage=neural,
+        scfg=ServingConfig(plan="filter", max_queue=64,
+                           flush=FlushPolicy(max_wait_ms=5.0),
+                           degrade=DegradePolicy(high_watermark=16,
+                                                 low_watermark=4)))
     t0 = time.time()
-    shapes = srv.warmup()        # compile every serving shape bucket up front
+    shapes = ses.warmup()        # compile every serving shape bucket up front
     print(f"warmed {len(shapes)} shape buckets {shapes} "
           f"in {time.time() - t0:.1f}s")
 
@@ -46,30 +61,37 @@ def main():
     n_te = te.x.shape[0]
     picks = rng.integers(0, n_te, args.requests)
     t0 = time.time()
-    for i, qi in enumerate(picks):
-        n_items = int(rng.integers(8, 64))
-        srv.submit(RankRequest(request_id=i,
-                               q_feat=te.q[qi].astype(np.float32),
-                               item_feats=te.x[qi, :n_items].astype(np.float32),
-                               m_q=int(te.m_q[qi])))
-    resps = srv.serve()
-    wall = time.time() - t0
-    lat = np.array([r.est_latency_ms for r in resps])
-    print(f"{len(resps)} requests in {wall:.1f}s wall "
-          f"({len(resps)/wall:.0f} QPS this host)")
-    print(f"modeled serve latency mean {lat.mean():.1f}ms / "
-          f"p95 {np.percentile(lat, 95):.1f}ms (budget 130ms)")
-    # ranking quality on served responses vs ground-truth relevance
+    reqs = [RankRequest(request_id=i,
+                        q_feat=te.q[qi].astype(np.float32),
+                        item_feats=te.x[qi, :int(rng.integers(8, 64))]
+                        .astype(np.float32),
+                        m_q=int(te.m_q[qi]))
+            for i, qi in enumerate(picks)]
+    gen_s = time.time() - t0
+    res = run_open_loop(ses, reqs, args.qps, deadline_ms=args.deadline_ms)
+    print(f"generated {len(reqs)} requests in {gen_s:.2f}s; offered "
+          f"{res.offered_qps:.0f} QPS -> {res.achieved_qps:.0f} QPS achieved "
+          f"({res.serve_s:.1f}s compute)")
+    print(f"shed {res.shed} ({100*res.shed_frac:.1f}%), degraded "
+          f"{res.degraded}, deadline-missed {res.deadline_missed}")
+    if len(res.latency_ms):
+        print(f"end-to-end latency p50 {res.pct(50):.1f}ms / "
+              f"p95 {res.pct(95):.1f}ms (deadline {args.deadline_ms:.0f}ms)")
+    # ranking quality on the SERVED responses vs ground-truth relevance
+    # (shed requests return no ranking and are skipped)
     aucs = []
-    for r, qi in zip(resps, picks):
-        n = len(r.order)
-        rel = te.relevance[qi, :n]
+    for fut, qi in zip(res.futures, picks):
+        r = fut.result()
+        if r.status != "ok":
+            continue
+        n = len(r.scores)
         y = (te.y[qi, :n] > 0)
         if 0 < y.sum() < n and np.isfinite(r.scores).any():
             aucs.append(M.auc(r.scores, y.astype(float)))
-    print(f"mean per-request AUC (cascade + untrained neural stage): "
-          f"{np.nanmean(aucs):.3f}  — train the stage with "
-          f"examples/train_ranker.py for a real final-stage model")
+    print(f"mean per-request AUC over {len(aucs)} served requests "
+          f"(cascade + untrained neural stage): {np.nanmean(aucs):.3f}  — "
+          f"train the stage with examples/train_ranker.py for a real "
+          f"final-stage model")
 
 
 if __name__ == "__main__":

@@ -47,3 +47,11 @@ rm -f BENCH_serving.json
 timeout "${BENCH_TIMEOUT:-300}" python -m benchmarks.serving_bench --smoke
 test -s BENCH_serving.json || { echo "BENCH_serving.json missing"; exit 1; }
 phase_done "serving bench smoke"
+
+echo "== serve open-loop smoke: zero dropped futures + latency report =="
+# launch.serve exits nonzero itself if any submitted future never resolves
+rm -f BENCH_serve.json
+timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.serve \
+    --requests 60 --qps 400 --report BENCH_serve.json
+test -s BENCH_serve.json || { echo "BENCH_serve.json missing"; exit 1; }
+phase_done "serve open-loop smoke"

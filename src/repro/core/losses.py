@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cascade as C
-from repro.core.pipeline import latency_from_counts
+from repro.core.pipeline import latency_from_counts, resolve_plan
 from repro.data.synthetic import BEHAVIOR_CLICK, BEHAVIOR_PURCHASE
 from repro.kernels import ops as K
 from repro.kernels.cascade_loss.kernel import pack_items
@@ -94,12 +94,15 @@ class LossConfig:
 def cascade_forward(params: C.Params, cfg: C.CascadeConfig,
                     x: jax.Array, q: jax.Array, *,
                     penalty_variant: bool = False,
-                    score_fn=None) -> tuple[jax.Array, jax.Array | None]:
+                    score_fn=None,
+                    plan: str = "score") -> tuple[jax.Array, jax.Array | None]:
     """(B, G, T) cumulative log pass-probabilities through the fused scorer.
 
-    x: (B, G, d_x), q: (B, d_q). The scorer is the BATCHED entry point
-    (kernels.ops.cascade_score_batched — one 2-D (batch, item-block) grid,
-    no jax.vmap wrapping); score_fn overrides it with any
+    x: (B, G, d_x), q: (B, d_q). The scorer is resolved through the
+    pipeline-plan registry (core.pipeline.PLANS — default plan "score":
+    kernels.ops.cascade_score_batched, one 2-D (batch, item-block) grid,
+    no jax.vmap wrapping), so training scores through the same registry
+    entry as serving; score_fn overrides it with any
     (x, w_eff, zq) -> lp callable (the training benchmark pins the old
     vmap-of-single-group path this way to measure the batched win).
 
@@ -110,7 +113,7 @@ def cascade_forward(params: C.Params, cfg: C.CascadeConfig,
     variant re-runs only the scorer on already-computed inputs with the
     gradient taps moved, not a new loss formulation.
     """
-    score = score_fn or K.cascade_score_batched
+    score = score_fn or resolve_plan(plan).scorer
     masks = jnp.asarray(cfg.masks, dtype=x.dtype)
     w_eff = params["w_x"] * masks                                   # (T, d_x)
     zq = q @ params["w_q"].T + params["b"]                          # (B, T)

@@ -16,15 +16,67 @@ CascadeServer jits end-to-end per shape bucket.
 
 from __future__ import annotations
 
+import dataclasses
+from typing import Callable
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import cascade as C
 from repro.kernels import ops as K
 
-# The serving modes run_cascade accepts — shared with CascadeServer so the
-# two validation sites cannot drift.
-FUSED_MODES = ("none", "score", "filter")
+
+# ---------------------------------------------------------------------------
+# The pipeline-plan registry — THE single source of truth for serving-mode
+# resolution. Every consumer (run_cascade, losses.cascade_forward's scorer
+# seam, serving.CascadeSession / CascadeServer, the benches) resolves its
+# mode string through resolve_plan, so an unknown plan fails with the SAME
+# error everywhere and no module carries its own mode validation.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """One named way to execute the cascade.
+
+    scorer: (x (B, G, d), w_eff (T, d), zq (B, T), *, interpret=None)
+            -> lp (B, G, T) — the shared scoring entry point this plan uses
+            (losses.cascade_forward scores through it too).
+    fused_filter: run the fully fused score+filter kernel instead of
+            scorer + the XLA stage chain.
+    """
+    name: str
+    description: str
+    scorer: Callable[..., jax.Array]
+    fused_filter: bool = False
+
+
+def _score_ref(x, w_eff, zq, *, interpret=None):
+    del interpret  # the XLA reference has no kernel body to interpret
+    return K.cascade_score_batched_ref(x, w_eff, zq)
+
+
+PLANS: dict[str, PipelinePlan] = {
+    "none": PipelinePlan(
+        "none", "XLA reference scorer + XLA stage chain", _score_ref),
+    "score": PipelinePlan(
+        "score", "batched fused Pallas scorer + XLA stage chain",
+        K.cascade_score_batched),
+    "filter": PipelinePlan(
+        "filter", "fully fused score+filter kernel (one VMEM pass)",
+        K.cascade_score_batched, fused_filter=True),
+}
+
+# Back-compat alias (pre-registry modules iterated this tuple).
+FUSED_MODES = tuple(PLANS)
+
+
+def resolve_plan(name: str) -> PipelinePlan:
+    """Resolve a plan name, raising the one shared unknown-plan error."""
+    plan = PLANS.get(name)
+    if plan is None:
+        raise ValueError(f"unknown pipeline plan: {name!r} "
+                         f"(expected one of {tuple(PLANS)})")
+    return plan
 
 
 def keep_counts_from_lp(lp: jax.Array, mask: jax.Array,
@@ -69,17 +121,16 @@ def run_cascade(params: C.Params, cfg: C.CascadeConfig,
                 interpret: bool | None = None) -> dict[str, jax.Array]:
     """Score + hard-filter a padded (B, G) candidate batch.
 
-    fused: 'none'   — XLA scorer + XLA stage chain (the reference path);
+    fused names a PLANS entry:
+           'none'   — XLA scorer + XLA stage chain (the reference path);
            'score'  — batched fused Pallas scorer, XLA stage chain;
            'filter' — fully fused score+filter kernel (one VMEM pass).
 
     Returns lp (B, G, T), survivors (B, G, T), scores (B, G),
     expected_counts (B, T), n_keep (B, T), kept_per_stage (B, T)."""
-    # Validate the mode BEFORE any compute: an unknown mode must not cost
+    # Resolve the plan BEFORE any compute: an unknown plan must not cost
     # a scoring setup (w_eff/zq) or surface as a downstream shape error.
-    if fused not in FUSED_MODES:
-        raise ValueError(f"unknown fused mode: {fused!r} "
-                         f"(expected one of {FUSED_MODES})")
+    plan = resolve_plan(fused)
     # One scoring formulation for every mode (precomputed w_eff / zq, the
     # kernel's decomposition): the fused and unfused paths must agree not
     # just to tolerance but on every DISCRETE decision (ceil'd keep
@@ -87,17 +138,12 @@ def run_cascade(params: C.Params, cfg: C.CascadeConfig,
     # ops in the same order.
     w_eff = params["w_x"] * jnp.asarray(cfg.masks, jnp.float32)
     zq = q @ params["w_q"].T + params["b"]
-    if fused == "filter":
+    if plan.fused_filter:
         out = K.cascade_filter(x, w_eff, zq, mask, m_q, interpret=interpret)
         lp, surv = out["lp"], out["survivors"]
         counts, n_keep = out["expected_counts"], out["n_keep"]
     else:
-        if fused == "score":
-            # the native batched (B, G) kernel entry point — one 2-D grid
-            # launch, no jax.vmap restructuring (see kernels/cascade_score)
-            lp = K.cascade_score_batched(x, w_eff, zq, interpret=interpret)
-        else:  # "none"
-            lp = K.cascade_score_batched_ref(x, w_eff, zq)
+        lp = plan.scorer(x, w_eff, zq, interpret=interpret)
         counts, n_keep = keep_counts_from_lp(lp, mask, m_q)
         surv = filter_chain(lp, mask, n_keep)
     return {

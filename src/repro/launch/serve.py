@@ -1,14 +1,24 @@
-"""Serving launcher: run the CLOES cascade server over a synthetic request
-stream (the paper's operational workload) and report throughput/latency.
+"""Serving launcher: drive the streaming CascadeSession over an OPEN-LOOP
+synthetic request stream (Poisson arrivals at a fixed offered rate, per-
+request deadlines, bounded admission with load-shedding and degraded
+modes) and report the request-lifecycle outcome: shed / degraded /
+deadline-miss fractions and end-to-end latency percentiles.
+
+Request generation is timed SEPARATELY from the serve phase — the old
+closed-loop launcher started its clock before the submit loop, charging
+request construction to the server's QPS.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.serve --requests 500 [--neural ARCH]
+  PYTHONPATH=src python -m repro.launch.serve --requests 500 --qps 400 \
+      [--deadline-ms 130] [--max-queue 128] [--neural ARCH] \
+      [--report BENCH_serve.json]
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -21,59 +31,124 @@ from repro.core import losses as L
 from repro.core import trainer as T
 from repro.data import LogConfig, generate_log
 from repro.serving.batching import RankRequest
-from repro.serving.cascade_server import CascadeServer, NeuralScorer
+from repro.serving.cascade_server import NeuralScorer
+from repro.serving.loadgen import run_open_loop
+from repro.serving.session import (CascadeSession, DegradePolicy,
+                                   FlushPolicy, ServingConfig)
+
+
+def build_session(params, cfg, lcfg=None, *, neural=None, plan="filter",
+                  max_queue=128, max_wait_ms=5.0) -> CascadeSession:
+    """The launcher's serving profile: bounded queue with load-shedding,
+    degradation watermarks derived from the queue bound (enter at 3/4
+    capacity, exit at 1/4 — the hysteresis band)."""
+    degrade = (DegradePolicy(high_watermark=max(1, (3 * max_queue) // 4),
+                             low_watermark=max_queue // 4)
+               if max_queue else DegradePolicy(high_watermark=None))
+    return CascadeSession(
+        params, cfg, lcfg, neural_stage=neural,
+        scfg=ServingConfig(plan=plan,
+                           max_queue=max_queue or None,
+                           flush=FlushPolicy(max_wait_ms=max_wait_ms),
+                           degrade=degrade))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=500)
+    ap.add_argument("--qps", type=float, default=400.0,
+                    help="offered load (Poisson arrival rate)")
+    ap.add_argument("--deadline-ms", type=float, default=130.0,
+                    help="per-request deadline budget (0 = no deadlines)")
+    ap.add_argument("--max-queue", type=int, default=128,
+                    help="admission bound (0 = unbounded, never sheds)")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--plan", default="filter",
+                    help="pipeline plan (core.pipeline.PLANS entry)")
     ap.add_argument("--neural", default="",
                     help="arch id for the neural final stage (smoke variant)")
     ap.add_argument("--beta", type=float, default=5.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--report", default="",
+                    help="write the latency/lifecycle report as JSON here")
     args = ap.parse_args()
 
     log = generate_log(LogConfig(n_queries=800, seed=args.seed))
     tr, te = log.split(0.8)
     print("[serve] training cascade...")
+    t0 = time.time()
     params, cfg = B.fit_cloes(tr, lcfg=L.LossConfig(beta=args.beta),
                               tcfg=T.TrainConfig(loss="l3", epochs=4, lr=0.01))
+    train_s = time.time() - t0
     neural = None
     if args.neural:
         ncfg = dataclasses.replace(CFG.get_smoke(args.neural),
                                    dtype=jnp.float32)
         neural = NeuralScorer.create(ncfg, jax.random.PRNGKey(7))
         print(f"[serve] neural final stage: {ncfg.name}")
-    srv = CascadeServer(params, cfg, neural_stage=neural)
+    ses = build_session(params, cfg, neural=neural, plan=args.plan,
+                        max_queue=args.max_queue,
+                        max_wait_ms=args.max_wait_ms)
     t0 = time.time()
-    shapes = srv.warmup()
-    print(f"[serve] warmed {len(shapes)} shape buckets in "
-          f"{time.time() - t0:.1f}s")
+    shapes = ses.warmup()
+    warmup_s = time.time() - t0
+    print(f"[serve] warmed {len(shapes)} shape buckets in {warmup_s:.1f}s")
 
+    # -- request generation, timed on its own (NOT charged to the server) --
     rng = np.random.default_rng(args.seed)
     n_te = te.x.shape[0]
     t0 = time.time()
+    reqs = []
     for i in range(args.requests):
         qi = int(rng.integers(0, n_te))
         n_items = int(rng.integers(8, 64))
-        srv.submit(RankRequest(
+        reqs.append(RankRequest(
             request_id=i, q_feat=te.q[qi].astype(np.float32),
             item_feats=te.x[qi, :n_items].astype(np.float32),
             m_q=int(te.m_q[qi])))
-    resps = srv.serve()
-    wall = time.time() - t0
-    if not resps:
+    gen_s = time.time() - t0
+    if not reqs:
         print("[serve] no requests submitted — nothing to report")
         return
-    lats = np.array([r.est_latency_ms for r in resps])
-    surv = np.array([r.survivors.sum() for r in resps])
-    print(f"[serve] {len(resps)} responses in {wall:.2f}s "
-          f"({len(resps)/wall:.0f} QPS on this host)")
-    print(f"[serve] modeled latency: mean {lats.mean():.1f}ms "
-          f"p95 {np.percentile(lats, 95):.1f}ms budget 130ms")
-    print(f"[serve] survivors/request: mean {surv.mean():.1f}")
-    over = (lats > 130).mean()
-    print(f"[serve] over-budget fraction: {over:.3f}")
+    print(f"[serve] generated {len(reqs)} requests in {gen_s:.2f}s "
+          f"({len(reqs)/max(gen_s, 1e-9):.0f} req/s generation rate)")
+
+    # -- the open-loop serve phase ----------------------------------------
+    deadline = args.deadline_ms if args.deadline_ms > 0 else None
+    res = run_open_loop(ses, reqs, args.qps, deadline_ms=deadline,
+                        seed=args.seed)
+    print(f"[serve] offered {res.offered_qps:.0f} QPS; served "
+          f"{res.completed}/{res.n_requests} over {res.sim_s:.2f}s simulated "
+          f"({res.achieved_qps:.0f} QPS achieved, {res.serve_s:.2f}s compute)")
+    print(f"[serve] shed {res.shed} ({100*res.shed_frac:.1f}%), degraded "
+          f"{res.degraded}, deadline-missed {res.deadline_missed}, "
+          f"truncated {res.truncated}")
+    if len(res.latency_ms):
+        print(f"[serve] end-to-end latency: p50 {res.pct(50):.1f}ms "
+              f"p95 {res.pct(95):.1f}ms p99 {res.pct(99):.1f}ms")
+    print(f"[serve] session stats: {ses.stats}")
+
+    if res.unresolved:
+        raise SystemExit(
+            f"[serve] FAIL: {res.unresolved} futures never resolved — every "
+            "submitted request must come back with an explicit status")
+    print("[serve] all futures resolved (zero dropped)")
+
+    if args.report:
+        report = {
+            "config": {"requests": args.requests, "offered_qps": args.qps,
+                       "deadline_ms": args.deadline_ms,
+                       "max_queue": args.max_queue, "plan": args.plan,
+                       "neural": args.neural or None, "seed": args.seed,
+                       "backend": jax.default_backend()},
+            "phases_s": {"train": train_s, "warmup": warmup_s,
+                         "generate": gen_s, "serve": res.serve_s},
+            "generation_rate_rps": len(reqs) / max(gen_s, 1e-9),
+            "open_loop": res.summary(),
+        }
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"[serve] wrote {args.report}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,17 @@
+"""Serving layer: the streaming CascadeSession engine (request lifecycle
+with deadlines, flush policy, admission control, degraded modes), the
+CascadeServer compatibility shim, request batching, and the open-loop
+load generator. See README.md "Serving quickstart"."""
+
+from repro.serving.batching import (RankRequest, RankResponse,
+                                    RequestBatcher, pack_requests)
+from repro.serving.cascade_server import CascadeServer, NeuralScorer
+from repro.serving.loadgen import OpenLoopResult, run_open_loop
+from repro.serving.session import (CascadeSession, DegradePolicy,
+                                   FlushPolicy, QueueFull, RankFuture,
+                                   ServingConfig)
+
+__all__ = ["CascadeServer", "CascadeSession", "DegradePolicy", "FlushPolicy",
+           "NeuralScorer", "OpenLoopResult", "QueueFull", "RankFuture",
+           "RankRequest", "RankResponse", "RequestBatcher", "ServingConfig",
+           "pack_requests", "run_open_loop"]

@@ -32,6 +32,66 @@ class RankResponse:
     survivors: np.ndarray       # bool mask of items that passed all stages
     est_latency_ms: float       # Eq-16 latency model for this query
     stage_counts: list[int]
+    # request-lifecycle metadata (serving.session) — every response carries
+    # an explicit status instead of silently dropping or truncating work:
+    status: str = "ok"          # "ok" | "shed" (admission-control rejection)
+    degraded: tuple[str, ...] = ()  # degradation modes applied to this request
+    truncated: bool = False     # item list exceeded the serving bucket
+    deadline_missed: bool = False   # flushed after the request's deadline
+    wait_ms: float = 0.0        # time spent queued before the flush
+
+
+def bucket_of(n_items: int, buckets: tuple[int, ...]) -> int:
+    """Smallest declared bucket that fits n_items (the largest one when
+    nothing fits — the request is then truncated). `buckets` sorted
+    ascending. Shared by RequestBatcher and CascadeSession so the two can
+    never bucket the same request differently."""
+    for b in buckets:
+        if n_items <= b:
+            return b
+    return buckets[-1]
+
+
+def warmup_batch_sizes(batch_groups: int) -> list[int]:
+    """Every batch-axis size pack_requests can emit: powers of two up to
+    batch_groups — THE warmup ladder. Must stay in lockstep with
+    pack_requests' pow2 padding below; both warmup implementations build
+    their shape set from this."""
+    bs, b = [], 1
+    while b < batch_groups:
+        bs.append(b)
+        b <<= 1
+    bs.append(batch_groups)
+    return bs
+
+
+def pack_requests(reqs: list[RankRequest], g: int, batch_groups: int) -> dict:
+    """Pad a chunk of requests into one (B, g) batch — the ONE packing
+    implementation shared by RequestBatcher.drain and CascadeSession's
+    flush path, so the two produce bit-identical batches.
+
+    The batch axis is padded to the next power of two (capped at
+    batch_groups): full batches always hit the warm (batch_groups, bucket)
+    compilation, while a short drain tail compiles at most
+    log2(batch_groups) extra shapes AND pays at most 2x the per-row compute
+    of its real requests — padding straight to batch_groups would run e.g.
+    the neural final stage on 32 rows to serve one. Padded rows are
+    all-masked and never surfaced (responses index only the real requests).
+    Items beyond g are truncated (surfaced as RankResponse.truncated)."""
+    b = min(batch_groups, 1 << (len(reqs) - 1).bit_length())
+    d_x = reqs[0].item_feats.shape[-1]
+    d_q = reqs[0].q_feat.shape[-1]
+    x = np.zeros((b, g, d_x), np.float32)
+    q = np.zeros((b, d_q), np.float32)
+    mask = np.zeros((b, g), np.float32)
+    m_q = np.zeros((b,), np.float32)
+    for i, r in enumerate(reqs):
+        n = min(len(r.item_feats), g)
+        x[i, :n] = r.item_feats[:n]
+        q[i] = r.q_feat
+        mask[i, :n] = 1.0
+        m_q[i] = r.m_q
+    return {"x": x, "q": q, "mask": mask, "m_q": m_q}
 
 
 class RequestBatcher:
@@ -51,18 +111,16 @@ class RequestBatcher:
         return len(self._queue)
 
     def _bucket(self, n_items: int) -> int:
-        for b in self.buckets:
-            if n_items <= b:
-                return b
-        return self.buckets[-1]
+        return bucket_of(n_items, self.buckets)
 
     def drain(self) -> Iterator[tuple[list[int], list[RankRequest], dict]]:
         """Yield (submit_seqs, requests, padded batch arrays) until the
         queue is empty. Batches are grouped per shape bucket, so they do
         NOT come out in submit order — submit_seqs carries each request's
         position in the submit stream so callers (CascadeServer.serve)
-        can restore it. Items beyond the largest bucket are truncated
-        (and noted)."""
+        can restore it. Items beyond the largest bucket are truncated;
+        consumers surface this as RankResponse.truncated (a request is
+        truncated exactly when len(item_feats) > the batch's G)."""
         by_bucket: dict[int, list[tuple[int, RankRequest]]] = {}
         for seq, r in enumerate(self._queue):
             by_bucket.setdefault(self._bucket(len(r.item_feats)),
@@ -75,28 +133,7 @@ class RequestBatcher:
                 yield [seq for seq, _ in chunk], reqs, self._pad(reqs, g)
 
     def _pad(self, reqs: list[RankRequest], g: int) -> dict:
-        # The batch axis is padded to the next power of two (capped at
-        # batch_groups): full batches always hit the warm
-        # (batch_groups, bucket) compilation, while a short drain tail
-        # compiles at most log2(batch_groups) extra shapes AND pays at
-        # most 2x the per-row compute of its real requests — padding
-        # straight to batch_groups would run e.g. the neural final stage
-        # on 32 rows to serve one. Padded rows are all-masked and never
-        # surfaced (responses index only the real requests).
-        b = min(self.batch_groups, 1 << (len(reqs) - 1).bit_length())
-        d_x = reqs[0].item_feats.shape[-1]
-        d_q = reqs[0].q_feat.shape[-1]
-        x = np.zeros((b, g, d_x), np.float32)
-        q = np.zeros((b, d_q), np.float32)
-        mask = np.zeros((b, g), np.float32)
-        m_q = np.zeros((b,), np.float32)
-        for i, r in enumerate(reqs):
-            n = min(len(r.item_feats), g)
-            x[i, :n] = r.item_feats[:n]
-            q[i] = r.q_feat
-            mask[i, :n] = 1.0
-            m_q[i] = r.m_q
-        return {"x": x, "q": q, "mask": mask, "m_q": m_q}
+        return pack_requests(reqs, g, self.batch_groups)
 
     def warmup(self, rank_fn, d_x: int, d_q: int) -> list[tuple[int, int]]:
         """Drive rank_fn once per serving shape so every jit compilation
@@ -104,12 +141,7 @@ class RequestBatcher:
         every (b, bucket) with b a power of two up to batch_groups — the
         exact shapes _pad can emit, including drain-tail batches.
         Returns the list of warmed shapes."""
-        bs = []
-        b = 1
-        while b < self.batch_groups:
-            bs.append(b)
-            b <<= 1
-        bs.append(self.batch_groups)
+        bs = warmup_batch_sizes(self.batch_groups)
         shapes = []
         for g in self.buckets:
             for b in bs:

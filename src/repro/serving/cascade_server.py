@@ -8,22 +8,28 @@ architectures with a scalar value head — re-scores only the items that
 survive the linear cascade, exactly how the paper treats the expensive
 "Deep & Wide" feature (Table 1, cost 0.84): a costly scorer that the
 cascade shields from the bulk of the traffic.
+
+CascadeServer is now a thin COMPATIBILITY SHIM over the streaming
+serving.session.CascadeSession engine: submit() queues unboundedly and
+serve() drains everything, exactly as before — new code should use
+CascadeSession directly (deadlines, admission control, flush policy,
+degraded modes). The two are bit-identical on the same request set.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import cascade as C
 from repro.core import losses as L
-from repro.core import pipeline as P
 from repro.models import base as MB
 from repro.models import zoo as Z
 from repro.serving.batching import RankRequest, RankResponse, RequestBatcher
+from repro.serving.session import CascadeSession, DegradePolicy, ServingConfig
 
 
 # ---------------------------------------------------------------------------
@@ -88,120 +94,70 @@ class NeuralScorer:
 # ---------------------------------------------------------------------------
 
 class CascadeServer:
+    """Thin compatibility shim over serving.session.CascadeSession:
+    unbounded queue, no deadlines, no degradation — submit() then serve()
+    drains everything in submit order, exactly the pre-session API."""
+
     def __init__(self, params: C.Params, cfg: C.CascadeConfig,
                  lcfg: L.LossConfig | None = None,
                  neural_stage: NeuralScorer | None = None,
                  neural_cost: float = 0.84,
-                 use_fused_kernel: bool = True,
+                 use_fused_kernel: bool | None = None,
                  fused: str | None = None,
                  batcher: RequestBatcher | None = None):
-        self.params = jax.tree_util.tree_map(jnp.asarray, params)
-        self.cfg = cfg
-        self.lcfg = lcfg or L.LossConfig()
-        self.neural = neural_stage
-        self.neural_cost = neural_cost
-        # fused selects the core.pipeline mode directly ('filter' — the
+        # fused names a core.pipeline.PLANS entry directly ('filter' — the
         # fully fused kernel, 'score' — the batched scorer + XLA stage
-        # chain, 'none' — the XLA reference path); the use_fused_kernel
-        # bool is the pre-batched-scorer API and maps to filter/none.
-        # An explicit fused= always takes precedence over the legacy bool.
-        self.fused = fused if fused is not None else (
-            "filter" if use_fused_kernel else "none")
-        if self.fused not in P.FUSED_MODES:
-            # same up-front contract as run_cascade: fail at construction,
-            # not from inside the first rank_batch trace
-            raise ValueError(f"unknown fused mode: {self.fused!r} "
-                             f"(expected one of {P.FUSED_MODES})")
+        # chain, 'none' — the XLA reference path). use_fused_kernel is the
+        # pre-registry bool API, deprecated for one release of aliasing;
+        # an explicit fused= always takes precedence over the legacy bool.
+        if use_fused_kernel is not None:
+            warnings.warn(
+                "CascadeServer(use_fused_kernel=...) is deprecated; pass "
+                "fused='filter' (True) or fused='none' (False) — a "
+                "core.pipeline.PLANS plan name — instead",
+                DeprecationWarning, stacklevel=2)
+            if fused is None:
+                fused = "filter" if use_fused_kernel else "none"
+        self.fused = fused if fused is not None else "filter"
         self.use_fused_kernel = self.fused == "filter"
         self.batcher = batcher if batcher is not None else RequestBatcher()
-        # The whole serving pipeline (scoring -> filtering -> latency
-        # estimate) is ONE jitted function; the batcher's fixed shape
-        # buckets keep its compile cache small. Only mask (B, G) and m_q
-        # (B,) are donated — the only inputs whose buffers can alias an
-        # output shape; donating x/q would just warn (donation is
-        # unsupported on CPU altogether).
-        self._donates = jax.default_backend() != "cpu"
-        donate = (3, 4) if self._donates else ()
-        self._rank = jax.jit(self._rank_impl, donate_argnums=donate)
+        self.session = CascadeSession(
+            params, cfg, lcfg, neural_stage=neural_stage,
+            scfg=ServingConfig(
+                plan=self.fused,
+                group_buckets=tuple(self.batcher.buckets),
+                batch_groups=self.batcher.batch_groups,
+                max_queue=None,                        # legacy: unbounded
+                degrade=DegradePolicy(high_watermark=None),
+                neural_cost=neural_cost))
+        self.params = self.session.params
+        self.cfg = cfg
+        self.lcfg = self.session.lcfg
+        self.neural = neural_stage
+        self.neural_cost = neural_cost
+        self._futures = []
 
-    # -- the jitted pipeline ---------------------------------------------
-
-    def _rank_impl(self, params: C.Params, x: jax.Array, q: jax.Array,
-                   mask: jax.Array, m_q: jax.Array) -> dict:
-        """Score -> hard filter -> latency estimate, end to end."""
-        out = P.run_cascade(params, self.cfg, x, q, mask, m_q,
-                            fused=self.fused)
-        surv = out["survivors"][..., -1]
-        final_scores = jnp.where(surv > 0, out["scores"], -jnp.inf)
-
-        if self.neural is not None:
-            # expensive stage: score only survivors (flattened, padded)
-            b, g, _ = x.shape
-            flat = x.reshape(b * g, -1)
-            nscore = self.neural.score(flat).reshape(b, g)
-            final_scores = jnp.where(surv > 0,
-                                     final_scores + nscore.astype(jnp.float32),
-                                     -jnp.inf)
-
-        # Eq-16 latency from the pipeline's own expected counts — no
-        # re-scoring of the batch (the old path scored it a second time).
-        lat = P.latency_from_counts(out["expected_counts"], m_q, self.cfg,
-                                    self.lcfg.latency_scale,
-                                    self.lcfg.latency_convention)
-        if self.neural is not None:
-            lat = lat + (self.lcfg.latency_scale * self.neural_cost
-                         * surv.sum(-1) / jnp.maximum(mask.sum(-1), 1)
-                         * jnp.minimum(m_q, 6000.0))
-        return {
-            "scores": final_scores,
-            "survivors": surv,
-            "stage_survivors": out["survivors"],
-            "est_latency_ms": lat,
-        }
+    @property
+    def _rank(self):
+        """The session's jitted pipeline (compile-cache introspection)."""
+        return self.session._rank
 
     def rank_batch(self, batch: dict) -> dict:
         """Run the jitted hard-cascade pipeline on a padded batch."""
-        def dev(v):
-            # jnp.asarray is a no-op for a float32 jax array, and donating
-            # that would invalidate the CALLER'S buffer — copy instead.
-            # numpy inputs (the batcher path) already land in fresh,
-            # safely-donatable device buffers.
-            if self._donates and isinstance(v, jax.Array):
-                return jnp.array(v, jnp.float32, copy=True)
-            return jnp.asarray(v, jnp.float32)
-        return self._rank(self.params,
-                          jnp.asarray(batch["x"], jnp.float32),
-                          jnp.asarray(batch["q"], jnp.float32),
-                          dev(batch["mask"]), dev(batch["m_q"]))
+        return self.session.rank_batch(batch)
 
     def warmup(self) -> list[tuple[int, int]]:
         """Pre-compile the pipeline for every batcher shape bucket."""
-        return self.batcher.warmup(self.rank_batch, self.cfg.d_x, self.cfg.d_q)
+        return self.session.warmup()
 
     # -- request API ------------------------------------------------------
 
     def submit(self, req: RankRequest) -> None:
-        self.batcher.submit(req)
+        self._futures.append(self.session.submit(req))
 
     def serve(self) -> list[RankResponse]:
-        # The batcher drains bucket by bucket (shape order, not submit
-        # order); responses are restored to submit order before return.
-        out: list[tuple[int, RankResponse]] = []
-        for seqs, reqs, batch in self.batcher.drain():
-            res = self.rank_batch(batch)
-            scores = np.asarray(res["scores"])
-            surv = np.asarray(res["survivors"])
-            lat = np.asarray(res["est_latency_ms"])
-            stage_counts = np.asarray(res["stage_survivors"].sum(axis=1))
-            for i, (seq, r) in enumerate(zip(seqs, reqs)):
-                n = len(r.item_feats)
-                order = np.argsort(-scores[i][:n], kind="stable")
-                out.append((seq, RankResponse(
-                    request_id=r.request_id,
-                    order=order,
-                    scores=scores[i][:n],
-                    survivors=surv[i][:n] > 0,
-                    est_latency_ms=float(lat[i]),
-                    stage_counts=[int(c) for c in stage_counts[i]],
-                )))
-        return [resp for _, resp in sorted(out, key=lambda p: p[0])]
+        # The session flushes bucket by bucket (shape order, not submit
+        # order); the futures list restores submit order before return.
+        self.session.flush()
+        futures, self._futures = self._futures, []
+        return [f.result() for f in futures]

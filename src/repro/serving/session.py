@@ -1,0 +1,431 @@
+"""Streaming CascadeSession serving engine — the request lifecycle API.
+
+The paper's system is *operational*: hundreds of millions of queries/day
+under joint accuracy / latency / result-size / CPU constraints, with
+graceful degradation instead of failure at peak load (Fig 5: Singles' Day
+traffic triples). That behavior lives in the request lifecycle, which this
+module makes the API:
+
+  session.submit(req, deadline_ms=...) -> RankFuture   (bounded admission)
+  session.step(now_ms)                 -> [RankResponse]  (the pump)
+  session.flush(now_ms)                -> [RankResponse]  (drain on demand)
+
+* Admission control: the queue is bounded (ServingConfig.max_queue). At
+  capacity the session LOAD-SHEDS — the future resolves immediately with
+  status="shed" (or raises QueueFull with admission="raise") instead of
+  queueing unboundedly. Every future always resolves with an explicit
+  status; nothing is silently dropped.
+* Flush policy: a bucket flushes when it can fill a batch, when its oldest
+  request's wait exceeds FlushPolicy.max_wait_ms, when a request's
+  deadline (minus deadline_slack_ms) falls due, or on demand (flush()).
+  step() flushes the single most-urgent due chunk so a driver can
+  interleave time accounting with service.
+* Degraded modes: under queue-depth pressure (DegradePolicy watermark
+  hysteresis: enter at high_watermark, exit at low_watermark) the session
+  trades result quality for CPU along the paper's multi-factor axes —
+  skip the neural final stage, tighten m_q (fewer expected survivors ->
+  less downstream cost), fall back to a smaller shape bucket. Every
+  degradation applied to a request is recorded on its response.
+
+The compute core is the same ONE jitted pipeline CascadeServer always ran
+(core.pipeline.run_cascade through the plan registry + optional neural
+final stage + Eq-16 latency); CascadeServer itself is now a thin
+compatibility shim over this engine, and with shedding/degradation
+disabled a submit-all-then-flush() session is bit-identical to
+CascadeServer.serve().
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cascade as C
+from repro.core import losses as L
+from repro.core import pipeline as P
+from repro.serving.batching import (RankRequest, RankResponse, bucket_of,
+                                    pack_requests, warmup_batch_sizes)
+
+
+class QueueFull(RuntimeError):
+    """submit() refused: the bounded queue is at capacity and the session
+    was configured with admission='raise' instead of load-shedding."""
+
+
+STATUS_OK = "ok"
+STATUS_SHED = "shed"
+
+DEGRADE_SKIP_NEURAL = "skip_neural"
+DEGRADE_TIGHTEN_MQ = "tighten_m_q"
+DEGRADE_SHRINK_BUCKET = "shrink_bucket"
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushPolicy:
+    """When does a bucket's pending chunk go to the accelerator?"""
+    max_wait_ms: float = 5.0        # oldest request's queue-wait ceiling
+    deadline_slack_ms: float = 2.0  # flush this early relative to deadlines
+    flush_full: bool = True         # flush the moment a full batch is ready
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradePolicy:
+    """Queue-depth hysteresis for graceful degradation (paper Fig 5).
+
+    high_watermark=None disables degradation entirely. Otherwise the
+    session enters degraded mode when the pending depth (at admission or
+    at a pump step) reaches high_watermark and leaves it only once the
+    depth falls back to low_watermark — the gap is the hysteresis band
+    that stops the mode from flapping at the boundary."""
+    high_watermark: int | None = None
+    low_watermark: int = 0
+    skip_neural: bool = True        # drop the expensive neural final stage
+    mq_scale: float = 0.5           # tighten m_q -> fewer expected survivors
+    shrink_bucket: bool = True      # serve large requests in a smaller bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """ONE configuration surface for the serving engine (replaces the
+    accreted per-call kwargs: use_fused_kernel/fused/batcher/neural_cost).
+
+    plan names a core.pipeline.PLANS entry; the batcher geometry mirrors
+    RequestBatcher's defaults; max_queue=None keeps the legacy unbounded
+    queue (the CascadeServer shim's compatibility mode)."""
+    plan: str = "filter"
+    group_buckets: tuple[int, ...] = (16, 64, 256)
+    batch_groups: int = 32
+    max_queue: int | None = None
+    admission: str = "shed"             # "shed" | "raise"
+    flush: FlushPolicy = FlushPolicy()
+    degrade: DegradePolicy = DegradePolicy()
+    default_deadline_ms: float | None = None  # relative budget for submit()
+    neural_cost: float = 0.84           # Table-1 cost of the neural stage
+
+
+class RankFuture:
+    """Handle for a submitted request. Resolves exactly once — either shed
+    at admission or served by a later step()/flush()."""
+
+    __slots__ = ("request_id", "_response")
+
+    def __init__(self, request_id: int):
+        self.request_id = request_id
+        self._response: RankResponse | None = None
+
+    def done(self) -> bool:
+        return self._response is not None
+
+    def result(self) -> RankResponse:
+        if self._response is None:
+            raise RuntimeError(
+                f"request {self.request_id} is still pending — pump the "
+                "session with step()/flush() before asking for the result")
+        return self._response
+
+
+@dataclasses.dataclass
+class _Pending:
+    req: RankRequest
+    future: RankFuture
+    submit_ms: float
+    deadline_ms: float | None
+    degraded: tuple[str, ...]   # admission-time degradations (bucket shrink)
+    truncated: bool
+
+
+def _shed_response(req: RankRequest) -> RankResponse:
+    return RankResponse(
+        request_id=req.request_id,
+        order=np.empty(0, np.int64),
+        scores=np.empty(0, np.float32),
+        survivors=np.empty(0, bool),
+        est_latency_ms=0.0,
+        stage_counts=[],
+        status=STATUS_SHED,
+    )
+
+
+class CascadeSession:
+    def __init__(self, params: C.Params, cfg: C.CascadeConfig,
+                 lcfg: L.LossConfig | None = None, *,
+                 neural_stage=None,
+                 scfg: ServingConfig | None = None):
+        self.params = jax.tree_util.tree_map(jnp.asarray, params)
+        self.cfg = cfg
+        self.lcfg = lcfg or L.LossConfig()
+        self.neural = neural_stage
+        self.scfg = scfg or ServingConfig()
+        # Resolve the plan at construction — unknown plans must fail here,
+        # with the registry's one shared error, not from inside the first
+        # rank_batch trace.
+        P.resolve_plan(self.scfg.plan)
+        self.buckets = tuple(sorted(self.scfg.group_buckets))
+        # Only mask (B, G) and m_q (B,) are donated — the only inputs whose
+        # buffers can alias an output shape; donating x/q would just warn
+        # (donation is unsupported on CPU altogether).
+        self._donates = jax.default_backend() != "cpu"
+        self._rank = self._make_rank(with_neural=True)
+        # The degraded pipeline drops the neural stage; it only exists as a
+        # distinct compilation when there is a neural stage to skip.
+        if self.neural is not None and self.scfg.degrade.skip_neural:
+            self._rank_noneural = self._make_rank(with_neural=False)
+        else:
+            self._rank_noneural = self._rank
+        self._pending: dict[int, list[_Pending]] = {g: [] for g in self.buckets}
+        self._degraded_active = False
+        self.stats = {"submitted": 0, "shed": 0, "completed": 0,
+                      "degraded": 0, "deadline_missed": 0, "truncated": 0,
+                      "degrade_enters": 0, "degrade_exits": 0}
+
+    # -- the jitted pipeline ---------------------------------------------
+
+    def _make_rank(self, with_neural: bool):
+        def impl(params: C.Params, x: jax.Array, q: jax.Array,
+                 mask: jax.Array, m_q: jax.Array) -> dict:
+            """Score -> hard filter -> latency estimate, end to end."""
+            out = P.run_cascade(params, self.cfg, x, q, mask, m_q,
+                                fused=self.scfg.plan)
+            surv = out["survivors"][..., -1]
+            final_scores = jnp.where(surv > 0, out["scores"], -jnp.inf)
+
+            if with_neural and self.neural is not None:
+                # expensive stage: score only survivors (flattened, padded)
+                b, g, _ = x.shape
+                flat = x.reshape(b * g, -1)
+                nscore = self.neural.score(flat).reshape(b, g)
+                final_scores = jnp.where(
+                    surv > 0, final_scores + nscore.astype(jnp.float32),
+                    -jnp.inf)
+
+            # Eq-16 latency from the pipeline's own expected counts — no
+            # re-scoring of the batch.
+            lat = P.latency_from_counts(out["expected_counts"], m_q, self.cfg,
+                                        self.lcfg.latency_scale,
+                                        self.lcfg.latency_convention)
+            if with_neural and self.neural is not None:
+                lat = lat + (self.lcfg.latency_scale * self.scfg.neural_cost
+                             * surv.sum(-1) / jnp.maximum(mask.sum(-1), 1)
+                             * jnp.minimum(m_q, 6000.0))
+            return {
+                "scores": final_scores,
+                "survivors": surv,
+                "stage_survivors": out["survivors"],
+                "est_latency_ms": lat,
+            }
+
+        donate = (3, 4) if self._donates else ()
+        return jax.jit(impl, donate_argnums=donate)
+
+    def rank_batch(self, batch: dict, *, skip_neural: bool = False) -> dict:
+        """Run the jitted hard-cascade pipeline on a padded batch."""
+        def dev(v):
+            # jnp.asarray is a no-op for a float32 jax array, and donating
+            # that would invalidate the CALLER'S buffer — copy instead.
+            # numpy inputs (the pack_requests path) already land in fresh,
+            # safely-donatable device buffers.
+            if self._donates and isinstance(v, jax.Array):
+                return jnp.array(v, jnp.float32, copy=True)
+            return jnp.asarray(v, jnp.float32)
+        rank = self._rank_noneural if skip_neural else self._rank
+        return rank(self.params,
+                    jnp.asarray(batch["x"], jnp.float32),
+                    jnp.asarray(batch["q"], jnp.float32),
+                    dev(batch["mask"]), dev(batch["m_q"]))
+
+    def warmup(self) -> list[tuple[int, int]]:
+        """Pre-compile the pipeline for every serving shape — each (b, g)
+        with b a power of two up to batch_groups (the exact shapes
+        pack_requests can emit) per bucket, for the normal AND (when
+        distinct) the degraded skip-neural pipeline. After warmup, live
+        traffic — including degraded flushes — never recompiles."""
+        bs = warmup_batch_sizes(self.scfg.batch_groups)
+        shapes = []
+        for g in self.buckets:
+            for b in bs:
+                batch = {
+                    "x": np.zeros((b, g, self.cfg.d_x), np.float32),
+                    "q": np.zeros((b, self.cfg.d_q), np.float32),
+                    "mask": np.ones((b, g), np.float32),
+                    "m_q": np.full((b,), float(g), np.float32),
+                }
+                self.rank_batch(batch)
+                if self._rank_noneural is not self._rank:
+                    self.rank_batch(batch, skip_neural=True)
+                shapes.append((b, g))
+        return shapes
+
+    # -- request lifecycle -------------------------------------------------
+
+    @staticmethod
+    def _now(now_ms: float | None) -> float:
+        return time.monotonic() * 1e3 if now_ms is None else float(now_ms)
+
+    @property
+    def pending(self) -> int:
+        return sum(len(v) for v in self._pending.values())
+
+    @property
+    def degraded(self) -> bool:
+        return self._degraded_active
+
+    def _update_degrade(self) -> None:
+        hw = self.scfg.degrade.high_watermark
+        if hw is None:
+            return
+        depth = self.pending
+        if not self._degraded_active and depth >= hw:
+            self._degraded_active = True
+            self.stats["degrade_enters"] += 1
+        elif self._degraded_active and depth <= self.scfg.degrade.low_watermark:
+            self._degraded_active = False
+            self.stats["degrade_exits"] += 1
+
+    def _bucket(self, n_items: int) -> int:
+        return bucket_of(n_items, self.buckets)
+
+    def submit(self, req: RankRequest, *, deadline_ms: float | None = None,
+               now_ms: float | None = None) -> RankFuture:
+        """Admit one request. deadline_ms is ABSOLUTE (same clock as
+        step()'s now_ms); ServingConfig.default_deadline_ms, if set, is a
+        RELATIVE budget applied when no explicit deadline is given.
+
+        At capacity the request is shed: the returned future is already
+        resolved with status="shed" (admission="raise" raises QueueFull
+        instead). Nothing ever queues past max_queue."""
+        now = self._now(now_ms)
+        fut = RankFuture(req.request_id)
+        self.stats["submitted"] += 1
+        mq = self.scfg.max_queue
+        if mq is not None and self.pending >= mq:
+            self.stats["shed"] += 1
+            if self.scfg.admission == "raise":
+                raise QueueFull(
+                    f"queue at capacity ({mq}); request {req.request_id} "
+                    "refused")
+            fut._response = _shed_response(req)
+            return fut
+        if deadline_ms is None and self.scfg.default_deadline_ms is not None:
+            deadline_ms = now + self.scfg.default_deadline_ms
+        # Depth-pressure check BEFORE bucketing: a request admitted while
+        # degraded may be demoted to a smaller shape bucket.
+        self._update_degrade()
+        degraded: tuple[str, ...] = ()
+        n = len(req.item_feats)
+        g = self._bucket(n)
+        if (self._degraded_active and self.scfg.degrade.shrink_bucket
+                and g > self.buckets[0]):
+            g = self.buckets[self.buckets.index(g) - 1]
+            degraded += (DEGRADE_SHRINK_BUCKET,)
+        self._pending[g].append(_Pending(
+            req=req, future=fut, submit_ms=now,
+            deadline_ms=deadline_ms, degraded=degraded, truncated=n > g))
+        return fut
+
+    def _due_ms(self, entries: list[_Pending]) -> float:
+        """Earliest moment this bucket must flush: oldest wait ceiling or
+        tightest deadline (minus slack); -inf when a full batch is ready
+        and the policy flushes full buckets eagerly."""
+        pol = self.scfg.flush
+        if pol.flush_full and len(entries) >= self.scfg.batch_groups:
+            return -math.inf
+        due = math.inf
+        for e in entries:
+            due = min(due, e.submit_ms + pol.max_wait_ms)
+            if e.deadline_ms is not None:
+                due = min(due, e.deadline_ms - pol.deadline_slack_ms)
+        return due
+
+    def next_due_ms(self) -> float | None:
+        """Earliest due time over all pending buckets (None when idle) —
+        open-loop drivers use this to fast-forward virtual time instead of
+        busy-polling step()."""
+        dues = [self._due_ms(v) for v in self._pending.values() if v]
+        return min(dues) if dues else None
+
+    def step(self, now_ms: float | None = None) -> list[RankResponse]:
+        """The pump: flush the single most-urgent due chunk, if any.
+
+        Returns that chunk's responses ([] when nothing is due yet). One
+        chunk per call, most-urgent first (earliest due time; ties go to
+        the smaller bucket), so deadline pressure — not arrival order —
+        decides flush ordering, and a driver can account service time
+        between chunks."""
+        now = self._now(now_ms)
+        self._update_degrade()
+        best_g, best_due = None, math.inf
+        for g in self.buckets:
+            entries = self._pending[g]
+            if not entries:
+                continue
+            due = self._due_ms(entries)
+            if due <= now and due < best_due:
+                best_g, best_due = g, due
+        if best_g is None:
+            return []
+        return self._flush_bucket(best_g, now)
+
+    def flush(self, now_ms: float | None = None) -> list[RankResponse]:
+        """Drain EVERYTHING on demand, ignoring due times: buckets in
+        ascending size order, FIFO chunks within a bucket — exactly the
+        order CascadeServer.serve() always used, so a submit-all-then-
+        flush session reproduces serve() bit for bit."""
+        now = self._now(now_ms)
+        out: list[RankResponse] = []
+        for g in self.buckets:
+            while self._pending[g]:
+                self._update_degrade()
+                out.extend(self._flush_bucket(g, now))
+        return out
+
+    def _flush_bucket(self, g: int, now: float) -> list[RankResponse]:
+        chunk = self._pending[g][:self.scfg.batch_groups]
+        del self._pending[g][:len(chunk)]
+        reqs = [e.req for e in chunk]
+        batch = pack_requests(reqs, g, self.scfg.batch_groups)
+        flush_degrades: tuple[str, ...] = ()
+        skip_neural = False
+        if self._degraded_active:
+            deg = self.scfg.degrade
+            if deg.skip_neural and self.neural is not None:
+                skip_neural = True
+                flush_degrades += (DEGRADE_SKIP_NEURAL,)
+            if deg.mq_scale < 1.0:
+                batch["m_q"] = np.maximum(batch["m_q"] * deg.mq_scale, 1.0)
+                flush_degrades += (DEGRADE_TIGHTEN_MQ,)
+        res = self.rank_batch(batch, skip_neural=skip_neural)
+        scores = np.asarray(res["scores"])
+        surv = np.asarray(res["survivors"])
+        lat = np.asarray(res["est_latency_ms"])
+        stage_counts = np.asarray(res["stage_survivors"].sum(axis=1))
+        out = []
+        for i, e in enumerate(chunk):
+            n = len(e.req.item_feats)           # numpy caps slices at g
+            order = np.argsort(-scores[i][:n], kind="stable")
+            degraded = e.degraded + flush_degrades
+            missed = e.deadline_ms is not None and now > e.deadline_ms
+            resp = RankResponse(
+                request_id=e.req.request_id,
+                order=order,
+                scores=scores[i][:n],
+                survivors=surv[i][:n] > 0,
+                est_latency_ms=float(lat[i]),
+                stage_counts=[int(c) for c in stage_counts[i]],
+                status=STATUS_OK,
+                degraded=degraded,
+                truncated=e.truncated,
+                deadline_missed=missed,
+                wait_ms=now - e.submit_ms,
+            )
+            e.future._response = resp
+            self.stats["completed"] += 1
+            self.stats["degraded"] += bool(degraded)
+            self.stats["deadline_missed"] += missed
+            self.stats["truncated"] += e.truncated
+            out.append(resp)
+        return out

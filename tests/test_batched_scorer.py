@@ -217,11 +217,11 @@ def _pipeline_case(seed=0, b=4, g=48):
 
 
 def test_run_cascade_rejects_unknown_mode_before_computing():
-    """The mode check must fire before w_eff/zq are computed — garbage
+    """The plan check must fire before w_eff/zq are computed — garbage
     params that would blow up the scoring setup must not be touched."""
     _, cfg, x, q, mask, m_q = _pipeline_case()
     bad_params = {"w_x": jnp.zeros((1, 2))}     # would KeyError/shape-error
-    with pytest.raises(ValueError, match="unknown fused mode: 'bogus'"):
+    with pytest.raises(ValueError, match="unknown pipeline plan: 'bogus'"):
         P.run_cascade(bad_params, cfg, x, q, mask, m_q, fused="bogus")
 
 
@@ -241,17 +241,22 @@ def test_run_cascade_score_mode_decision_parity():
 
 
 def test_cascade_forward_scores_through_batched_entry_point(monkeypatch):
-    """The trainer's fused forward must call the batched op — and never
+    """The trainer's fused forward must resolve its scorer through the
+    pipeline-plan registry (plan "score" -> the batched op) — and never
     jax.vmap — for both the primal and the penalty-variant scorer."""
+    import dataclasses
     from repro.core import losses as L
     calls = []
-    real = ops.cascade_score_batched
+    plan = P.PLANS["score"]
+    assert plan.scorer is ops.cascade_score_batched
+    real = plan.scorer
 
     def spy(x, w_eff, zq, **kw):
         calls.append(x.shape)
         return real(x, w_eff, zq, **kw)
 
-    monkeypatch.setattr(L.K, "cascade_score_batched", spy)
+    monkeypatch.setitem(P.PLANS, "score",
+                        dataclasses.replace(plan, scorer=spy))
 
     def boom(*a, **k):                          # any vmap use is a fail
         raise AssertionError("cascade_forward must not use jax.vmap")

@@ -103,8 +103,42 @@ def test_serve_returns_responses_in_submit_order(fused):
 
 
 def test_server_rejects_unknown_fused_mode_at_construction():
-    with pytest.raises(ValueError, match="unknown fused mode: 'scores'"):
+    # the registry's ONE error — identical across run_cascade, the server,
+    # the session, and the benches
+    with pytest.raises(ValueError, match="unknown pipeline plan: 'scores'"):
         _server(fused="scores")
+
+
+def test_serving_bench_rejects_unknown_plan_with_the_same_error():
+    from benchmarks import serving_bench
+    with pytest.raises(ValueError, match="unknown pipeline plan: 'scores'"):
+        serving_bench.run(smoke=True, plan="scores")
+
+
+# ---------------------------------------------------------------------------
+# use_fused_kernel deprecation: one release of aliasing onto the registry.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("legacy, plan", [(True, "filter"), (False, "none")])
+def test_use_fused_kernel_is_deprecated_but_aliases_the_plan(legacy, plan):
+    masks = F.default_stage_masks(3)
+    cfg = C.CascadeConfig(3, F.N_FEATURES, F.N_QUERY_BUCKETS, masks,
+                          F.stage_costs(masks))
+    params = C.init_params(cfg, jax.random.PRNGKey(0), scale=0.3)
+    with pytest.warns(DeprecationWarning, match="use_fused_kernel"):
+        srv = CascadeServer(params, cfg, use_fused_kernel=legacy)
+    assert srv.fused == plan
+    assert srv.session.scfg.plan == plan
+    # an explicit fused= wins over the legacy bool (still warns)
+    with pytest.warns(DeprecationWarning):
+        srv2 = CascadeServer(params, cfg, use_fused_kernel=legacy,
+                             fused="score")
+    assert srv2.fused == "score"
+    # the modern spelling is warning-free
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        CascadeServer(params, cfg, fused=plan)
 
 
 # ---------------------------------------------------------------------------

@@ -98,8 +98,8 @@ def test_fused_kernel_path_matches_xla_path(trained):
     batch = {"x": te.x[:4].astype(np.float32), "q": te.q[:4].astype(np.float32),
              "mask": te.mask[:4].astype(np.float32),
              "m_q": te.m_q[:4].astype(np.float32)}
-    a = CascadeServer(params, cfg, lcfg, use_fused_kernel=True).rank_batch(batch)
-    b = CascadeServer(params, cfg, lcfg, use_fused_kernel=False).rank_batch(batch)
+    a = CascadeServer(params, cfg, lcfg, fused="filter").rank_batch(batch)
+    b = CascadeServer(params, cfg, lcfg, fused="none").rank_batch(batch)
     # identical survivor sets — final AND per-stage
     np.testing.assert_array_equal(np.asarray(a["survivors"]),
                                   np.asarray(b["survivors"]))
@@ -123,7 +123,8 @@ def test_served_responses_identical_across_paths(trained):
     n = te.x.shape[0]
 
     def responses(use_fused):
-        srv = CascadeServer(params, cfg, lcfg, use_fused_kernel=use_fused)
+        srv = CascadeServer(params, cfg, lcfg,
+                            fused="filter" if use_fused else "none")
         r2 = np.random.default_rng(7)
         for i in range(6):
             qi, k = int(r2.integers(0, n)), int(r2.integers(4, 48))

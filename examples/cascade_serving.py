@@ -4,7 +4,12 @@ arrivals with per-request deadlines, bounded admission, and one of the
 assigned architectures as the expensive neural final stage (skipped under
 degraded mode when the queue backs up).
 
-    PYTHONPATH=src python examples/cascade_serving.py [--arch qwen3-8b]
+By default the open loop runs on the virtual-clock DES; with --pump it
+runs on the wall clock instead — a live SessionPump background thread
+with concurrent submitter threads blocking on their futures.
+
+    PYTHONPATH=src python examples/cascade_serving.py [--arch qwen3-8b] \
+        [--pump]
 """
 
 import argparse
@@ -24,6 +29,7 @@ from repro.data import LogConfig, generate_log
 from repro.serving.batching import RankRequest
 from repro.serving.cascade_server import NeuralScorer
 from repro.serving.loadgen import run_open_loop
+from repro.serving.pump import SessionPump, run_wall_clock
 from repro.serving.session import (CascadeSession, DegradePolicy,
                                    FlushPolicy, ServingConfig)
 
@@ -35,6 +41,8 @@ def main():
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--qps", type=float, default=300.0)
     ap.add_argument("--deadline-ms", type=float, default=130.0)
+    ap.add_argument("--pump", action="store_true",
+                    help="wall-clock SessionPump instead of the DES")
     args = ap.parse_args()
 
     log = generate_log(LogConfig(n_queries=600, seed=1))
@@ -68,10 +76,18 @@ def main():
                         m_q=int(te.m_q[qi]))
             for i, qi in enumerate(picks)]
     gen_s = time.time() - t0
-    res = run_open_loop(ses, reqs, args.qps, deadline_ms=args.deadline_ms)
+    if args.pump:
+        with SessionPump(ses) as pump:
+            res = run_wall_clock(pump, reqs, args.qps,
+                                 deadline_ms=args.deadline_ms)
+        clock_note = f"{res.wall_s:.1f}s wall"
+    else:
+        res = run_open_loop(ses, reqs, args.qps,
+                            deadline_ms=args.deadline_ms)
+        clock_note = f"{res.serve_s:.1f}s compute"
     print(f"generated {len(reqs)} requests in {gen_s:.2f}s; offered "
           f"{res.offered_qps:.0f} QPS -> {res.achieved_qps:.0f} QPS achieved "
-          f"({res.serve_s:.1f}s compute)")
+          f"({clock_note})")
     print(f"shed {res.shed} ({100*res.shed_frac:.1f}%), degraded "
           f"{res.degraded}, deadline-missed {res.deadline_missed}")
     if len(res.latency_ms):

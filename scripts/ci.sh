@@ -55,3 +55,12 @@ timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.serve \
     --requests 60 --qps 400 --report BENCH_serve.json
 test -s BENCH_serve.json || { echo "BENCH_serve.json missing"; exit 1; }
 phase_done "serve open-loop smoke"
+
+echo "== pump soak smoke: wall-clock SessionPump, zero unresolved futures =="
+# same contract on the real clock: concurrent submitter threads against a
+# live pump; launch.serve exits nonzero if any future never resolves
+rm -f BENCH_pump.json
+timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.serve \
+    --pump --requests 60 --qps 400 --report BENCH_pump.json
+test -s BENCH_pump.json || { echo "BENCH_pump.json missing"; exit 1; }
+phase_done "pump soak smoke"

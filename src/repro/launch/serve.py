@@ -4,14 +4,23 @@ request deadlines, bounded admission with load-shedding and degraded
 modes) and report the request-lifecycle outcome: shed / degraded /
 deadline-miss fractions and end-to-end latency percentiles.
 
+Two clocks, one lifecycle:
+  * default: the virtual-clock DES (loadgen.run_open_loop) — arrivals and
+    flush policy on a simulated millisecond clock, service times real
+    measured compute; deterministic given a host.
+  * --pump: WALL-CLOCK mode — a live SessionPump background thread with N
+    concurrent submitter threads blocking on their futures; real time
+    drives everything. The soak contract: zero unresolved futures across
+    pump shutdown.
+
 Request generation is timed SEPARATELY from the serve phase — the old
 closed-loop launcher started its clock before the submit loop, charging
 request construction to the server's QPS.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --requests 500 --qps 400 \
-      [--deadline-ms 130] [--max-queue 128] [--neural ARCH] \
-      [--report BENCH_serve.json]
+      [--pump [--threads 4]] [--deadline-ms 130] [--max-queue 128] \
+      [--neural ARCH] [--report BENCH_serve.json]
 """
 
 from __future__ import annotations
@@ -33,6 +42,7 @@ from repro.data import LogConfig, generate_log
 from repro.serving.batching import RankRequest
 from repro.serving.cascade_server import NeuralScorer
 from repro.serving.loadgen import run_open_loop
+from repro.serving.pump import SessionPump, run_wall_clock
 from repro.serving.session import (CascadeSession, DegradePolicy,
                                    FlushPolicy, ServingConfig)
 
@@ -63,6 +73,11 @@ def main() -> None:
     ap.add_argument("--max-queue", type=int, default=128,
                     help="admission bound (0 = unbounded, never sheds)")
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--pump", action="store_true",
+                    help="wall-clock mode: live SessionPump + concurrent "
+                         "submitter threads (default: virtual-clock DES)")
+    ap.add_argument("--threads", type=int, default=4,
+                    help="submitter threads in --pump mode")
     ap.add_argument("--plan", default="filter",
                     help="pipeline plan (core.pipeline.PLANS entry)")
     ap.add_argument("--neural", default="",
@@ -113,13 +128,31 @@ def main() -> None:
     print(f"[serve] generated {len(reqs)} requests in {gen_s:.2f}s "
           f"({len(reqs)/max(gen_s, 1e-9):.0f} req/s generation rate)")
 
-    # -- the open-loop serve phase ----------------------------------------
+    # -- the serve phase: wall-clock pump or virtual-clock DES -------------
     deadline = args.deadline_ms if args.deadline_ms > 0 else None
-    res = run_open_loop(ses, reqs, args.qps, deadline_ms=deadline,
-                        seed=args.seed)
-    print(f"[serve] offered {res.offered_qps:.0f} QPS; served "
-          f"{res.completed}/{res.n_requests} over {res.sim_s:.2f}s simulated "
-          f"({res.achieved_qps:.0f} QPS achieved, {res.serve_s:.2f}s compute)")
+    pump_stats = None
+    if args.pump:
+        pump = SessionPump(ses).start()
+        res = run_wall_clock(pump, reqs, args.qps, deadline_ms=deadline,
+                             n_threads=args.threads, seed=args.seed)
+        pump.close()
+        pump_stats = dict(pump.stats)
+        unresolved_after_close = sum(1 for f in res.futures if not f.done())
+        print(f"[serve] pump mode: offered {res.offered_qps:.0f} QPS from "
+              f"{args.threads} threads; served {res.completed}/"
+              f"{res.n_requests} in {res.wall_s:.2f}s wall "
+              f"({res.achieved_qps:.0f} QPS achieved)")
+        print(f"[serve] pump stats: {pump_stats}")
+        serve_s = res.wall_s
+    else:
+        res = run_open_loop(ses, reqs, args.qps, deadline_ms=deadline,
+                            seed=args.seed)
+        unresolved_after_close = res.unresolved
+        print(f"[serve] offered {res.offered_qps:.0f} QPS; served "
+              f"{res.completed}/{res.n_requests} over {res.sim_s:.2f}s "
+              f"simulated ({res.achieved_qps:.0f} QPS achieved, "
+              f"{res.serve_s:.2f}s compute)")
+        serve_s = res.serve_s
     print(f"[serve] shed {res.shed} ({100*res.shed_frac:.1f}%), degraded "
           f"{res.degraded}, deadline-missed {res.deadline_missed}, "
           f"truncated {res.truncated}")
@@ -128,10 +161,11 @@ def main() -> None:
               f"p95 {res.pct(95):.1f}ms p99 {res.pct(99):.1f}ms")
     print(f"[serve] session stats: {ses.stats}")
 
-    if res.unresolved:
+    if res.unresolved or unresolved_after_close:
         raise SystemExit(
-            f"[serve] FAIL: {res.unresolved} futures never resolved — every "
-            "submitted request must come back with an explicit status")
+            f"[serve] FAIL: {max(res.unresolved, unresolved_after_close)} "
+            "futures never resolved — every submitted request must come "
+            "back with an explicit status")
     print("[serve] all futures resolved (zero dropped)")
 
     if args.report:
@@ -140,12 +174,16 @@ def main() -> None:
                        "deadline_ms": args.deadline_ms,
                        "max_queue": args.max_queue, "plan": args.plan,
                        "neural": args.neural or None, "seed": args.seed,
+                       "mode": "pump" if args.pump else "des",
+                       "threads": args.threads if args.pump else None,
                        "backend": jax.default_backend()},
             "phases_s": {"train": train_s, "warmup": warmup_s,
-                         "generate": gen_s, "serve": res.serve_s},
+                         "generate": gen_s, "serve": serve_s},
             "generation_rate_rps": len(reqs) / max(gen_s, 1e-9),
-            "open_loop": res.summary(),
+            ("wall_clock" if args.pump else "open_loop"): res.summary(),
         }
+        if pump_stats is not None:
+            report["pump_stats"] = pump_stats
         with open(args.report, "w") as f:
             json.dump(report, f, indent=2)
         print(f"[serve] wrote {args.report}")

@@ -1,12 +1,18 @@
 """Serving layer: the streaming CascadeSession engine (request lifecycle
 with deadlines, flush policy, admission control, degraded modes), the
-CascadeServer compatibility shim, request batching, and the open-loop
-load generator. See README.md "Serving quickstart"."""
+real-time SessionPump (wall-clock continuous batching, thread-safe
+submit, blocking futures), the CascadeServer compatibility shim, request
+batching with a pinned transfer-buffer pool, and the open-loop load
+generators (virtual-clock DES + wall-clock). See README.md "Serving
+quickstart"."""
 
 from repro.serving.batching import (RankRequest, RankResponse,
-                                    RequestBatcher, pack_requests)
+                                    RequestBatcher, TransferBufferPool,
+                                    pack_requests)
 from repro.serving.cascade_server import CascadeServer, NeuralScorer
 from repro.serving.loadgen import OpenLoopResult, run_open_loop
+from repro.serving.pump import (SessionPump, WallClockResult,
+                                run_wall_clock)
 from repro.serving.session import (CascadeSession, DegradePolicy,
                                    FlushPolicy, QueueFull, RankFuture,
                                    ServingConfig)
@@ -14,4 +20,5 @@ from repro.serving.session import (CascadeSession, DegradePolicy,
 __all__ = ["CascadeServer", "CascadeSession", "DegradePolicy", "FlushPolicy",
            "NeuralScorer", "OpenLoopResult", "QueueFull", "RankFuture",
            "RankRequest", "RankResponse", "RequestBatcher", "ServingConfig",
-           "pack_requests", "run_open_loop"]
+           "SessionPump", "TransferBufferPool", "WallClockResult",
+           "pack_requests", "run_open_loop", "run_wall_clock"]

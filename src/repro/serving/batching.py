@@ -10,6 +10,7 @@ set of shapes (shape-bucketing — the standard trick to avoid recompiles).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Iterator
 
 import numpy as np
@@ -36,9 +37,11 @@ class RankResponse:
     # an explicit status instead of silently dropping or truncating work:
     status: str = "ok"          # "ok" | "shed" (admission-control rejection)
     degraded: tuple[str, ...] = ()  # degradation modes applied to this request
-    truncated: bool = False     # item list exceeded the serving bucket
-    deadline_missed: bool = False   # flushed after the request's deadline
-    wait_ms: float = 0.0        # time spent queued before the flush
+    truncated: bool = False     # item list exceeded the LARGEST bucket
+    deadline_missed: bool = False   # service COMPLETED after the deadline
+    wait_ms: float = 0.0        # time spent queued before the flush start
+    service_ms: float = 0.0     # flush start -> completion (0 when the
+    # driver cannot know service time: explicit-clock step()/flush())
 
 
 def bucket_of(n_items: int, buckets: tuple[int, ...]) -> int:
@@ -65,6 +68,34 @@ def warmup_batch_sizes(batch_groups: int) -> list[int]:
     return bs
 
 
+def padded_batch_rows(n_reqs: int, batch_groups: int) -> int:
+    """The batch-axis size a chunk of n_reqs packs into: next power of two,
+    capped at batch_groups — THE pow2 padding rule (see pack_requests)."""
+    return min(batch_groups, 1 << (n_reqs - 1).bit_length())
+
+
+def alloc_batch(b: int, g: int, d_x: int, d_q: int) -> dict:
+    """A zeroed (b, g) staging batch — the layout pack_into fills."""
+    return {"x": np.zeros((b, g, d_x), np.float32),
+            "q": np.zeros((b, d_q), np.float32),
+            "mask": np.zeros((b, g), np.float32),
+            "m_q": np.zeros((b,), np.float32)}
+
+
+def pack_into(batch: dict, reqs: list[RankRequest], g: int, *,
+              start: int = 0) -> None:
+    """Stage `reqs` into rows [start, start+len(reqs)) of an existing
+    zeroed batch (alloc_batch / TransferBufferPool.acquire layout). Rows
+    must not have been written since the batch was zeroed — incremental
+    packing (the pump's slot late-join) only ever appends rows."""
+    for i, r in enumerate(reqs, start=start):
+        n = min(len(r.item_feats), g)
+        batch["x"][i, :n] = r.item_feats[:n]
+        batch["q"][i] = r.q_feat
+        batch["mask"][i, :n] = 1.0
+        batch["m_q"][i] = r.m_q
+
+
 def pack_requests(reqs: list[RankRequest], g: int, batch_groups: int) -> dict:
     """Pad a chunk of requests into one (B, g) batch — the ONE packing
     implementation shared by RequestBatcher.drain and CascadeSession's
@@ -78,20 +109,61 @@ def pack_requests(reqs: list[RankRequest], g: int, batch_groups: int) -> dict:
     the neural final stage on 32 rows to serve one. Padded rows are
     all-masked and never surfaced (responses index only the real requests).
     Items beyond g are truncated (surfaced as RankResponse.truncated)."""
-    b = min(batch_groups, 1 << (len(reqs) - 1).bit_length())
+    b = padded_batch_rows(len(reqs), batch_groups)
     d_x = reqs[0].item_feats.shape[-1]
     d_q = reqs[0].q_feat.shape[-1]
-    x = np.zeros((b, g, d_x), np.float32)
-    q = np.zeros((b, d_q), np.float32)
-    mask = np.zeros((b, g), np.float32)
-    m_q = np.zeros((b,), np.float32)
-    for i, r in enumerate(reqs):
-        n = min(len(r.item_feats), g)
-        x[i, :n] = r.item_feats[:n]
-        q[i] = r.q_feat
-        mask[i, :n] = 1.0
-        m_q[i] = r.m_q
-    return {"x": x, "q": q, "mask": mask, "m_q": m_q}
+    batch = alloc_batch(b, g, d_x, d_q)
+    pack_into(batch, reqs, g)
+    return batch
+
+
+class TransferBufferPool:
+    """Reusable host staging buffers, one free list per (b, g) shape.
+
+    The serving hot path packs every flush chunk into a (b, g) batch; with
+    a handful of shape buckets and pow2 batch padding the shape set is
+    small and repeats forever, so allocating fresh numpy arrays per flush
+    is pure churn. The pool hands out preallocated buffers (zeroed on
+    acquire, so packing results are bit-identical to a fresh alloc) and
+    takes them back after the device results have been fetched — the
+    serving-layer analogue of a pinned transfer-buffer pool (on an
+    accelerator backend these arrays are what jax copies to device; keeping
+    them alive and reused is what makes page-locking them worthwhile).
+
+    acquire/release are thread-safe (the pump packs while submitters run);
+    `allocated`/`reused` expose hot-path allocation behavior to tests: a
+    warmed steady state must stop allocating entirely."""
+
+    def __init__(self, d_x: int, d_q: int, *, max_free_per_shape: int = 4):
+        self.d_x = d_x
+        self.d_q = d_q
+        self.max_free_per_shape = max_free_per_shape
+        self._free: dict[tuple[int, int], list[dict]] = {}
+        self._lock = threading.Lock()
+        self.allocated = 0
+        self.reused = 0
+
+    def acquire(self, b: int, g: int) -> dict:
+        """A zeroed (b, g) staging batch, reused when one is free."""
+        with self._lock:
+            free = self._free.get((b, g))
+            batch = free.pop() if free else None
+        if batch is None:
+            self.allocated += 1
+            return alloc_batch(b, g, self.d_x, self.d_q)
+        self.reused += 1
+        for v in batch.values():
+            v[...] = 0.0
+        return batch
+
+    def release(self, batch: dict) -> None:
+        """Return a buffer once its device results have been fetched —
+        NEVER while a dispatched computation may still read it."""
+        key = (batch["mask"].shape[0], batch["mask"].shape[1])
+        with self._lock:
+            free = self._free.setdefault(key, [])
+            if len(free) < self.max_free_per_shape:
+                free.append(batch)
 
 
 class RequestBatcher:

@@ -111,10 +111,10 @@ def run_open_loop(session: CascadeSession, reqs: list[RankRequest],
         for r in resps:
             latencies.append(done_ms - arrival_of[r.request_id])
             completions["degraded"] += bool(r.degraded)
-            completions["deadline_missed"] += (
-                r.deadline_missed
-                or (deadline_ms is not None
-                    and done_ms > arrival_of[r.request_id] + deadline_ms))
+            # the session's accounting is resolve-time-consistent (the
+            # virtual completion time is passed into resolve_chunk), so
+            # the response flag IS the truth — no local re-check
+            completions["deadline_missed"] += r.deadline_missed
             completions["truncated"] += r.truncated
 
     # Event loop in virtual-time order. The two event kinds are "request
@@ -145,14 +145,23 @@ def run_open_loop(session: CascadeSession, reqs: list[RankRequest],
             continue
         if t_flush is None:
             break
-        t0 = time.perf_counter()
-        resps = session.step(t_flush)
-        dt_ms = (time.perf_counter() - t0) * 1e3
-        if not resps:                   # defensive: due bucket raced away
+        # claim -> execute -> resolve: the chunk starts service at t_flush
+        # (virtual), its REAL compute time is measured around execute, and
+        # the virtual completion time t_flush + dt is passed through to
+        # resolve_chunk so deadline accounting happens at completion — a
+        # chunk that starts before its deadline but finishes after is
+        # reported late by the session itself.
+        chunk = session.claim_due(t_flush)
+        if chunk is None:               # defensive: due bucket raced away
             now = t_flush
             continue
+        t0 = time.perf_counter()
+        results = session.execute_chunk(chunk)
+        dt_ms = (time.perf_counter() - t0) * 1e3
         serve_s += dt_ms / 1e3
         now = t_flush + dt_ms
+        resps = session.resolve_chunk(chunk, results, now_ms=t_flush,
+                                      done_ms=now)
         record(resps, now)
     # loop exit requires session.pending == 0 (next_due_ms() is None only
     # when every bucket is empty): nothing is ever left hanging here

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 
 import jax
@@ -48,8 +49,10 @@ import numpy as np
 from repro.core import cascade as C
 from repro.core import losses as L
 from repro.core import pipeline as P
-from repro.serving.batching import (RankRequest, RankResponse, bucket_of,
-                                    pack_requests, warmup_batch_sizes)
+from repro.serving.batching import (RankRequest, RankResponse,
+                                    TransferBufferPool, bucket_of,
+                                    pack_into, padded_batch_rows,
+                                    warmup_batch_sizes)
 
 
 class QueueFull(RuntimeError):
@@ -109,24 +112,55 @@ class ServingConfig:
 
 
 class RankFuture:
-    """Handle for a submitted request. Resolves exactly once — either shed
-    at admission or served by a later step()/flush()."""
+    """Handle for a submitted request. Resolves exactly once — shed at
+    admission, served by a later step()/flush()/pump cycle, or shed at
+    pump shutdown.
 
-    __slots__ = ("request_id", "_response")
+    Two consumption styles, matching the two clocks:
+      * explicitly-clocked drivers (the DES, tests) poll done() and call
+        result() with no timeout — still-pending raises immediately, the
+        original poll semantics;
+      * wall-clock callers (threads submitting through a SessionPump)
+        block on wait(timeout)/result(timeout=...) — a threading.Event
+        per future, set exactly once at resolution."""
+
+    __slots__ = ("request_id", "bucket", "_response", "_event")
 
     def __init__(self, request_id: int):
         self.request_id = request_id
+        self.bucket: int | None = None   # shape bucket queued under (None: shed)
         self._response: RankResponse | None = None
+        self._event = threading.Event()
 
     def done(self) -> bool:
         return self._response is not None
 
-    def result(self) -> RankResponse:
+    def wait(self, timeout: float | None = None) -> bool:
+        """Block until resolved (or timeout seconds); True when done."""
+        self._event.wait(timeout)
+        return self.done()
+
+    def result(self, timeout: float | None = None) -> RankResponse:
+        """The response. With no timeout, a still-pending future raises
+        RuntimeError immediately (poll semantics — the DES's contract);
+        with a timeout, blocks up to that many seconds and raises
+        TimeoutError if the future is still unresolved."""
+        if self._response is None and timeout is not None:
+            if not self.wait(timeout):
+                raise TimeoutError(
+                    f"request {self.request_id} unresolved after "
+                    f"{timeout:g}s — is the pump running?")
         if self._response is None:
             raise RuntimeError(
                 f"request {self.request_id} is still pending — pump the "
                 "session with step()/flush() before asking for the result")
         return self._response
+
+    def _resolve(self, resp: RankResponse) -> None:
+        assert self._response is None, \
+            f"request {self.request_id} resolved twice"
+        self._response = resp
+        self._event.set()
 
 
 @dataclasses.dataclass
@@ -137,6 +171,30 @@ class _Pending:
     deadline_ms: float | None
     degraded: tuple[str, ...]   # admission-time degradations (bucket shrink)
     truncated: bool
+
+
+@dataclasses.dataclass
+class FlushChunk:
+    """A claimed unit of service: entries dequeued from one bucket's
+    pending queue plus the degradation decision taken at claim time.
+
+    The claim → pack → execute → resolve seam exists so drivers that know
+    completion time can account at it: the pump claims under the session
+    lock, packs/executes outside it (submitters keep running), and
+    resolves with the real wall completion time; the DES passes its
+    virtual completion time through. `capacity` is the pow2-padded batch
+    rows the packed buffer will carry — while `open` is True the pump may
+    slot late arrivals into rows [len(entries), capacity): padding rows
+    the batch pays for anyway."""
+    g: int
+    entries: list[_Pending]
+    degrades: tuple[str, ...]       # flush-time degradations (chunk-wide)
+    skip_neural: bool
+    mq_scale: float
+    capacity: int                   # padded batch rows (pow2 rule)
+    packed: int = 0                 # rows already staged into the buffer
+    open: bool = False              # pump: accepting slot late-joins
+    batch: dict | None = None       # pooled staging buffer once packed
 
 
 def _shed_response(req: RankRequest) -> RankResponse:
@@ -179,9 +237,23 @@ class CascadeSession:
             self._rank_noneural = self._rank
         self._pending: dict[int, list[_Pending]] = {g: [] for g in self.buckets}
         self._degraded_active = False
-        self.stats = {"submitted": 0, "shed": 0, "completed": 0,
-                      "degraded": 0, "deadline_missed": 0, "truncated": 0,
-                      "degrade_enters": 0, "degrade_exits": 0}
+        # ONE lock around admission + the pending queues + resolution. The
+        # explicitly-clocked DES path is single-threaded (the lock is then
+        # uncontended); the pump shares this lock with its submitters.
+        # RLock: the pump composes claim/resolve under the same lock the
+        # session's own methods take.
+        self.lock = threading.RLock()
+        # Staging buffers for request packing: per-(B, G) reuse so the
+        # flush hot path stops allocating (see TransferBufferPool).
+        self.pool = TransferBufferPool(cfg.d_x, cfg.d_q)
+        # "refused" counts admission="raise" rejections (QueueFull, no
+        # future) — distinct from "shed" (resolved future with
+        # status="shed"); "submitted" counts only requests that got a
+        # future.
+        self.stats = {"submitted": 0, "shed": 0, "refused": 0,
+                      "completed": 0, "degraded": 0, "deadline_missed": 0,
+                      "truncated": 0, "degrade_enters": 0,
+                      "degrade_exits": 0}
 
     # -- the jitted pipeline ---------------------------------------------
 
@@ -297,35 +369,50 @@ class CascadeSession:
 
         At capacity the request is shed: the returned future is already
         resolved with status="shed" (admission="raise" raises QueueFull
-        instead). Nothing ever queues past max_queue."""
-        now = self._now(now_ms)
-        fut = RankFuture(req.request_id)
-        self.stats["submitted"] += 1
-        mq = self.scfg.max_queue
-        if mq is not None and self.pending >= mq:
-            self.stats["shed"] += 1
-            if self.scfg.admission == "raise":
-                raise QueueFull(
-                    f"queue at capacity ({mq}); request {req.request_id} "
-                    "refused")
-            fut._response = _shed_response(req)
+        instead, counted under stats["refused"] — no future, no "shed" or
+        "submitted" increment). Nothing ever queues past max_queue."""
+        with self.lock:
+            now = self._now(now_ms)
+            mq = self.scfg.max_queue
+            if mq is not None and self.pending >= mq:
+                if self.scfg.admission == "raise":
+                    # Refused-by-raise is NOT a shed-with-future: the
+                    # caller gets an exception instead of a future, so it
+                    # gets its own stat and leaves submitted/shed alone.
+                    self.stats["refused"] += 1
+                    raise QueueFull(
+                        f"queue at capacity ({mq}); request "
+                        f"{req.request_id} refused")
+                fut = RankFuture(req.request_id)
+                self.stats["submitted"] += 1
+                self.stats["shed"] += 1
+                fut._resolve(_shed_response(req))
+                return fut
+            fut = RankFuture(req.request_id)
+            self.stats["submitted"] += 1
+            if (deadline_ms is None
+                    and self.scfg.default_deadline_ms is not None):
+                deadline_ms = now + self.scfg.default_deadline_ms
+            # Depth-pressure check BEFORE bucketing: a request admitted
+            # while degraded may be demoted to a smaller shape bucket.
+            self._update_degrade()
+            degraded: tuple[str, ...] = ()
+            n = len(req.item_feats)
+            g = self._bucket(n)
+            if (self._degraded_active and self.scfg.degrade.shrink_bucket
+                    and g > self.buckets[0]):
+                g = self.buckets[self.buckets.index(g) - 1]
+                degraded += (DEGRADE_SHRINK_BUCKET,)
+            # truncated means the request exceeded the LARGEST bucket —
+            # items genuinely beyond serving capacity. Items dropped by a
+            # shrink_bucket demotion are a degradation, carried by
+            # degraded=("shrink_bucket",), not conflated into truncated.
+            fut.bucket = g
+            self._pending[g].append(_Pending(
+                req=req, future=fut, submit_ms=now,
+                deadline_ms=deadline_ms, degraded=degraded,
+                truncated=n > self.buckets[-1]))
             return fut
-        if deadline_ms is None and self.scfg.default_deadline_ms is not None:
-            deadline_ms = now + self.scfg.default_deadline_ms
-        # Depth-pressure check BEFORE bucketing: a request admitted while
-        # degraded may be demoted to a smaller shape bucket.
-        self._update_degrade()
-        degraded: tuple[str, ...] = ()
-        n = len(req.item_feats)
-        g = self._bucket(n)
-        if (self._degraded_active and self.scfg.degrade.shrink_bucket
-                and g > self.buckets[0]):
-            g = self.buckets[self.buckets.index(g) - 1]
-            degraded += (DEGRADE_SHRINK_BUCKET,)
-        self._pending[g].append(_Pending(
-            req=req, future=fut, submit_ms=now,
-            deadline_ms=deadline_ms, degraded=degraded, truncated=n > g))
-        return fut
 
     def _due_ms(self, entries: list[_Pending]) -> float:
         """Earliest moment this bucket must flush: oldest wait ceiling or
@@ -345,8 +432,9 @@ class CascadeSession:
         """Earliest due time over all pending buckets (None when idle) —
         open-loop drivers use this to fast-forward virtual time instead of
         busy-polling step()."""
-        dues = [self._due_ms(v) for v in self._pending.values() if v]
-        return min(dues) if dues else None
+        with self.lock:
+            dues = [self._due_ms(v) for v in self._pending.values() if v]
+            return min(dues) if dues else None
 
     def step(self, now_ms: float | None = None) -> list[RankResponse]:
         """The pump: flush the single most-urgent due chunk, if any.
@@ -355,20 +443,19 @@ class CascadeSession:
         chunk per call, most-urgent first (earliest due time; ties go to
         the smaller bucket), so deadline pressure — not arrival order —
         decides flush ordering, and a driver can account service time
-        between chunks."""
+        between chunks.
+
+        On the explicit clock the whole flush "occurs at now_ms":
+        completion-time accounting (deadline_missed after real service
+        time) needs a driver that knows when service finished — the
+        SessionPump reads its wall clock, the DES loadgen passes its
+        virtual completion time — both through the claim_due /
+        execute_chunk / resolve_chunk seam below."""
         now = self._now(now_ms)
-        self._update_degrade()
-        best_g, best_due = None, math.inf
-        for g in self.buckets:
-            entries = self._pending[g]
-            if not entries:
-                continue
-            due = self._due_ms(entries)
-            if due <= now and due < best_due:
-                best_g, best_due = g, due
-        if best_g is None:
+        chunk = self.claim_due(now)
+        if chunk is None:
             return []
-        return self._flush_bucket(best_g, now)
+        return self.resolve_chunk(chunk, self.execute_chunk(chunk), now)
 
     def flush(self, now_ms: float | None = None) -> list[RankResponse]:
         """Drain EVERYTHING on demand, ignoring due times: buckets in
@@ -379,53 +466,152 @@ class CascadeSession:
         out: list[RankResponse] = []
         for g in self.buckets:
             while self._pending[g]:
-                self._update_degrade()
-                out.extend(self._flush_bucket(g, now))
+                chunk = self.claim_bucket(g)
+                out.extend(self.resolve_chunk(
+                    chunk, self.execute_chunk(chunk), now))
         return out
 
-    def _flush_bucket(self, g: int, now: float) -> list[RankResponse]:
-        chunk = self._pending[g][:self.scfg.batch_groups]
-        del self._pending[g][:len(chunk)]
-        reqs = [e.req for e in chunk]
-        batch = pack_requests(reqs, g, self.scfg.batch_groups)
-        flush_degrades: tuple[str, ...] = ()
-        skip_neural = False
-        if self._degraded_active:
-            deg = self.scfg.degrade
-            if deg.skip_neural and self.neural is not None:
-                skip_neural = True
-                flush_degrades += (DEGRADE_SKIP_NEURAL,)
-            if deg.mq_scale < 1.0:
-                batch["m_q"] = np.maximum(batch["m_q"] * deg.mq_scale, 1.0)
-                flush_degrades += (DEGRADE_TIGHTEN_MQ,)
-        res = self.rank_batch(batch, skip_neural=skip_neural)
-        scores = np.asarray(res["scores"])
-        surv = np.asarray(res["survivors"])
-        lat = np.asarray(res["est_latency_ms"])
-        stage_counts = np.asarray(res["stage_survivors"].sum(axis=1))
-        out = []
-        for i, e in enumerate(chunk):
-            n = len(e.req.item_feats)           # numpy caps slices at g
-            order = np.argsort(-scores[i][:n], kind="stable")
-            degraded = e.degraded + flush_degrades
-            missed = e.deadline_ms is not None and now > e.deadline_ms
-            resp = RankResponse(
-                request_id=e.req.request_id,
-                order=order,
-                scores=scores[i][:n],
-                survivors=surv[i][:n] > 0,
-                est_latency_ms=float(lat[i]),
-                stage_counts=[int(c) for c in stage_counts[i]],
-                status=STATUS_OK,
-                degraded=degraded,
-                truncated=e.truncated,
-                deadline_missed=missed,
-                wait_ms=now - e.submit_ms,
-            )
-            e.future._response = resp
-            self.stats["completed"] += 1
-            self.stats["degraded"] += bool(degraded)
-            self.stats["deadline_missed"] += missed
-            self.stats["truncated"] += e.truncated
-            out.append(resp)
+    # -- the claim / pack / execute / resolve seam -------------------------
+    #
+    # step()/flush() compose these four on the caller's single clock
+    # instant. Drivers that track completion time use them directly:
+    # the pump claims under the lock, packs+executes outside it (so
+    # submitters keep running, and late arrivals can slot-join an open
+    # chunk), then resolves at the measured wall completion; the DES
+    # loadgen executes between two virtual instants and passes the
+    # virtual completion time into resolve_chunk.
+
+    def claim_due(self, now_ms: float) -> FlushChunk | None:
+        """Dequeue the single most-urgent due chunk (None when nothing is
+        due): earliest due time wins, ties go to the smaller bucket."""
+        with self.lock:
+            self._update_degrade()
+            best_g, best_due = None, math.inf
+            for g in self.buckets:
+                entries = self._pending[g]
+                if not entries:
+                    continue
+                due = self._due_ms(entries)
+                if due <= now_ms and due < best_due:
+                    best_g, best_due = g, due
+            if best_g is None:
+                return None
+            return self.claim_bucket(best_g)
+
+    def claim_bucket(self, g: int) -> FlushChunk | None:
+        """Dequeue one FIFO chunk from bucket g with the degradation
+        decision frozen at claim time (the moment service is committed)."""
+        with self.lock:
+            self._update_degrade()
+            entries = self._pending[g][:self.scfg.batch_groups]
+            if not entries:
+                return None
+            del self._pending[g][:len(entries)]
+            degrades: tuple[str, ...] = ()
+            skip_neural = False
+            mq_scale = 1.0
+            if self._degraded_active:
+                deg = self.scfg.degrade
+                if deg.skip_neural and self.neural is not None:
+                    skip_neural = True
+                    degrades += (DEGRADE_SKIP_NEURAL,)
+                if deg.mq_scale < 1.0:
+                    mq_scale = deg.mq_scale
+                    degrades += (DEGRADE_TIGHTEN_MQ,)
+            return FlushChunk(
+                g=g, entries=entries, degrades=degrades,
+                skip_neural=skip_neural, mq_scale=mq_scale,
+                capacity=padded_batch_rows(len(entries),
+                                           self.scfg.batch_groups))
+
+    def pack_chunk(self, chunk: FlushChunk) -> None:
+        """Stage any not-yet-packed entries into the chunk's pooled
+        buffer. Incremental: the pump calls it once after claiming, and
+        again after closing the chunk to stage slot late-joiners into the
+        padding rows the batch already pays for."""
+        if chunk.batch is None:
+            chunk.batch = self.pool.acquire(chunk.capacity, chunk.g)
+        n = len(chunk.entries)
+        if chunk.packed < n:
+            pack_into(chunk.batch,
+                      [e.req for e in chunk.entries[chunk.packed:n]],
+                      chunk.g, start=chunk.packed)
+            chunk.packed = n
+
+    def execute_chunk(self, chunk: FlushChunk) -> dict:
+        """Pack (if needed) and run the jitted pipeline on the chunk;
+        fetch results to host and release the staging buffer. The slow
+        part — callers that care about concurrency run this OUTSIDE the
+        session lock."""
+        chunk.open = False
+        self.pack_chunk(chunk)
+        batch = chunk.batch
+        if chunk.mq_scale < 1.0:
+            np.maximum(batch["m_q"] * chunk.mq_scale, 1.0,
+                       out=batch["m_q"])
+        res = self.rank_batch(batch, skip_neural=chunk.skip_neural)
+        out = {
+            "scores": np.asarray(res["scores"]),
+            "survivors": np.asarray(res["survivors"]),
+            "lat": np.asarray(res["est_latency_ms"]),
+            "stage_counts": np.asarray(res["stage_survivors"].sum(axis=1)),
+        }
+        # results fetched -> nothing still reads the staging buffer
+        self.pool.release(batch)
+        chunk.batch = None
         return out
+
+    def resolve_chunk(self, chunk: FlushChunk, results: dict,
+                      now_ms: float, done_ms: float | None = None
+                      ) -> list[RankResponse]:
+        """Build responses and resolve the chunk's futures. now_ms is the
+        flush start (wait_ms accounting); done_ms is service COMPLETION —
+        deadline_missed is decided there, so a chunk that starts before
+        its deadline but finishes after is correctly reported late.
+        Explicit-clock callers that cannot know service time (step/flush)
+        leave done_ms=None, collapsing completion onto the flush instant."""
+        done = now_ms if done_ms is None else done_ms
+        scores, surv = results["scores"], results["survivors"]
+        lat, stage_counts = results["lat"], results["stage_counts"]
+        out = []
+        with self.lock:
+            for i, e in enumerate(chunk.entries):
+                n = len(e.req.item_feats)       # numpy caps slices at g
+                order = np.argsort(-scores[i][:n], kind="stable")
+                degraded = e.degraded + chunk.degrades
+                missed = e.deadline_ms is not None and done > e.deadline_ms
+                resp = RankResponse(
+                    request_id=e.req.request_id,
+                    order=order,
+                    scores=scores[i][:n],
+                    survivors=surv[i][:n] > 0,
+                    est_latency_ms=float(lat[i]),
+                    stage_counts=[int(c) for c in stage_counts[i]],
+                    status=STATUS_OK,
+                    degraded=degraded,
+                    truncated=e.truncated,
+                    deadline_missed=missed,
+                    wait_ms=now_ms - e.submit_ms,
+                    service_ms=done - now_ms,
+                )
+                e.future._resolve(resp)
+                self.stats["completed"] += 1
+                self.stats["degraded"] += bool(degraded)
+                self.stats["deadline_missed"] += missed
+                self.stats["truncated"] += e.truncated
+                out.append(resp)
+        return out
+
+    def shed_pending(self) -> int:
+        """Resolve EVERY still-queued future with status="shed" (pump
+        shutdown: outstanding work is refused, never left hanging).
+        Returns the number of futures shed."""
+        n = 0
+        with self.lock:
+            for g in self.buckets:
+                for e in self._pending[g]:
+                    e.future._resolve(_shed_response(e.req))
+                    self.stats["shed"] += 1
+                    n += 1
+                self._pending[g].clear()
+        return n

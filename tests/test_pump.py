@@ -1,0 +1,251 @@
+"""SessionPump wall-clock tests: thread-safe concurrent submission with
+blocking futures, clean close() semantics (drain vs shutdown-shed, never a
+hung future), slot late-join parity, transfer-buffer-pool reuse, and the
+wall-clock soak (concurrent submitters, zero unresolved futures, zero
+recompiles after warmup)."""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cascade as C
+from repro.core import losses as L
+from repro.data import features as F
+from repro.serving.batching import RankRequest, TransferBufferPool
+from repro.serving.pump import SessionPump, run_wall_clock
+from repro.serving.session import (CascadeSession, FlushPolicy,
+                                   ServingConfig, STATUS_OK, STATUS_SHED)
+
+
+def _cascade():
+    masks = F.default_stage_masks(3)
+    cfg = C.CascadeConfig(3, F.N_FEATURES, F.N_QUERY_BUCKETS, masks,
+                          F.stage_costs(masks))
+    params = C.init_params(cfg, jax.random.PRNGKey(0), scale=0.3)
+    return params, cfg
+
+
+def _req(i, n_items, cfg, seed=None):
+    rng = np.random.default_rng(n_items if seed is None else seed)
+    return RankRequest(request_id=i,
+                       q_feat=np.eye(cfg.d_q)[i % cfg.d_q].astype(np.float32),
+                       item_feats=rng.normal(size=(n_items, cfg.d_x))
+                       .astype(np.float32),
+                       m_q=10 * n_items + 1)
+
+
+def _session(params, cfg, *, buckets=(8,), batch_groups=2, **kw):
+    defaults = dict(plan="filter", group_buckets=buckets,
+                    batch_groups=batch_groups)
+    defaults.update(kw)
+    return CascadeSession(params, cfg, L.LossConfig(),
+                          scfg=ServingConfig(**defaults))
+
+
+# ---------------------------------------------------------------------------
+# Blocking future path: wait()/result(timeout=) vs the DES poll semantics.
+# ---------------------------------------------------------------------------
+
+def test_future_blocking_and_poll_semantics():
+    params, cfg = _cascade()
+    ses = _session(params, cfg)
+    fut = ses.submit(_req(0, 4, cfg), now_ms=0.0)
+    # poll semantics unchanged: no timeout -> immediate RuntimeError
+    with pytest.raises(RuntimeError, match="still pending"):
+        fut.result()
+    assert not fut.wait(timeout=0.01)
+    # blocking semantics: a bounded wait on an unpumped session times out
+    with pytest.raises(TimeoutError, match="unresolved"):
+        fut.result(timeout=0.01)
+    # a resolver thread unblocks a waiting consumer
+    t = threading.Thread(target=lambda: (time.sleep(0.05), ses.flush(1.0)))
+    t.start()
+    resp = fut.result(timeout=30.0)
+    t.join()
+    assert resp.status == STATUS_OK
+    assert fut.wait(timeout=0.0)            # already-set event: immediate
+
+
+# ---------------------------------------------------------------------------
+# Pump lifecycle: start/submit/close, drain vs shutdown-shed.
+# ---------------------------------------------------------------------------
+
+def test_pump_serves_blocking_submitters():
+    params, cfg = _cascade()
+    ses = _session(params, cfg, flush=FlushPolicy(max_wait_ms=2.0))
+    ses.warmup()
+    with SessionPump(ses) as pump:
+        futs = [pump.submit(_req(i, 4, cfg)) for i in range(5)]
+        resps = [f.result(timeout=30.0) for f in futs]
+    assert [r.status for r in resps] == [STATUS_OK] * 5
+    assert [r.request_id for r in resps] == list(range(5))
+    assert all(r.service_ms > 0 for r in resps)     # real measured service
+    assert ses.stats["completed"] == 5
+    assert pump.stats["served"] == 5 and pump.stats["cycles"] >= 1
+
+
+def test_pump_close_sheds_outstanding_futures_never_hangs():
+    params, cfg = _cascade()
+    # nothing can come due before close(): the wait ceiling is unreachable
+    # and batch_groups=4 keeps 3 submits from triggering a flush-full
+    ses = _session(params, cfg, batch_groups=4,
+                   flush=FlushPolicy(max_wait_ms=60_000.0))
+    pump = SessionPump(ses).start()
+    futs = [pump.submit(_req(i, 4, cfg)) for i in range(3)]
+    assert not any(f.done() for f in futs)
+    pump.close()                            # shutdown semantics: shed
+    assert all(f.done() for f in futs)
+    assert {f.result().status for f in futs} == {STATUS_SHED}
+    assert pump.stats["shutdown_shed"] == 3
+    assert ses.stats["shed"] == 3
+    with pytest.raises(RuntimeError, match="closed"):
+        pump.submit(_req(9, 4, cfg))
+
+
+def test_pump_close_drain_serves_outstanding_futures():
+    params, cfg = _cascade()
+    ses = _session(params, cfg, flush=FlushPolicy(max_wait_ms=60_000.0))
+    ses.warmup()
+    pump = SessionPump(ses).start()
+    futs = [pump.submit(_req(i, 4, cfg)) for i in range(3)]
+    pump.close(drain=True)                  # serve the queue, then stop
+    assert all(f.result().status == STATUS_OK for f in futs)
+    assert pump.stats["shutdown_shed"] == 0
+    assert ses.stats["completed"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Slot late-join: a same-bucket arrival during staging rides a padding row
+# of the in-flight batch — and its results are identical to a solo serve.
+# ---------------------------------------------------------------------------
+
+def test_slot_join_rides_padding_row_with_identical_results():
+    params, cfg = _cascade()
+    ses = _session(params, cfg, buckets=(8,), batch_groups=4)
+    ses.warmup()
+    pump = SessionPump(ses)                 # not started: drive by hand
+    ses.submit(_req(0, 4, cfg), now_ms=0.0)
+    ses.submit(_req(1, 4, cfg), now_ms=0.0)
+    ses.submit(_req(2, 4, cfg), now_ms=0.0)
+    chunk = ses.claim_due(100.0)            # 3 entries -> capacity 4 (pow2)
+    assert (chunk.g, len(chunk.entries), chunk.capacity) == (8, 3, 4)
+    with ses.lock:
+        chunk.open = True
+        pump._open[chunk.g] = chunk
+    ses.pack_chunk(chunk)                   # initial rows staged
+    late = pump.submit(_req(3, 5, cfg))     # lands in the open chunk
+    assert pump.stats["slot_joins"] == 1
+    assert len(chunk.entries) == 4 and ses.pending == 0
+    with ses.lock:
+        chunk.open = False
+        pump._open.pop(chunk.g)
+    ses.pack_chunk(chunk)                   # stages ONLY the late row
+    full = pump.submit(_req(4, 5, cfg))     # chunk closed -> queues normally
+    assert pump.stats["slot_joins"] == 1 and ses.pending == 1
+    resps = ses.resolve_chunk(chunk, ses.execute_chunk(chunk),
+                              now_ms=100.0, done_ms=101.0)
+    assert [r.request_id for r in resps] == [0, 1, 2, 3]
+    assert late.done() and not full.done()
+    # the slot-joined response is bit-identical to the same request served
+    # alone in a fresh session (padding-row ride changes nothing)
+    solo = _session(params, cfg, buckets=(8,), batch_groups=4)
+    f_solo = solo.submit(_req(3, 5, cfg), now_ms=0.0)
+    solo.flush(0.0)
+    np.testing.assert_array_equal(late.result().scores,
+                                  f_solo.result().scores)
+    np.testing.assert_array_equal(late.result().order,
+                                  f_solo.result().order)
+    assert late.result().stage_counts == f_solo.result().stage_counts
+
+
+def test_slot_join_respects_capacity():
+    params, cfg = _cascade()
+    ses = _session(params, cfg, buckets=(8,), batch_groups=2)
+    pump = SessionPump(ses)
+    ses.submit(_req(0, 4, cfg), now_ms=0.0)
+    ses.submit(_req(1, 4, cfg), now_ms=0.0)
+    chunk = ses.claim_due(100.0)            # full chunk: capacity 2
+    with ses.lock:
+        chunk.open = True
+        pump._open[chunk.g] = chunk
+    pump.submit(_req(2, 4, cfg))            # no free padded row -> queues
+    assert pump.stats["slot_joins"] == 0
+    assert ses.pending == 1
+    ses.resolve_chunk(chunk, ses.execute_chunk(chunk), now_ms=100.0)
+
+
+# ---------------------------------------------------------------------------
+# Transfer-buffer pool: steady state stops allocating, buffers come back
+# zeroed, results bit-identical to fresh allocation.
+# ---------------------------------------------------------------------------
+
+def test_transfer_pool_reuses_buffers_on_the_flush_hot_path():
+    params, cfg = _cascade()
+    ses = _session(params, cfg, buckets=(8,), batch_groups=2,
+                   flush=FlushPolicy(max_wait_ms=1.0))
+    ses.warmup()
+    for round_ in range(6):
+        futs = [ses.submit(_req(i, 4, cfg, seed=round_ * 8 + i),
+                           now_ms=round_ * 10.0) for i in range(2)]
+        ses.step(round_ * 10.0 + 5.0)
+        assert all(f.done() for f in futs)
+    # one (2, 8) buffer allocated once, then reused every round
+    assert ses.pool.allocated == 1
+    assert ses.pool.reused == 5
+
+
+def test_transfer_pool_zeroes_reused_buffers():
+    pool = TransferBufferPool(d_x=6, d_q=4)
+    buf = pool.acquire(2, 8)
+    buf["x"][...] = 7.0
+    buf["mask"][...] = 1.0
+    buf["m_q"][...] = 3.0
+    pool.release(buf)
+    buf2 = pool.acquire(2, 8)
+    assert buf2 is buf                      # same storage came back
+    for v in buf2.values():
+        assert (v == 0.0).all()             # ...zeroed, as if fresh
+    # distinct shapes never share buffers
+    other = pool.acquire(4, 8)
+    assert other["x"].shape == (4, 8, 6)
+    assert pool.allocated == 2 and pool.reused == 1
+
+
+# ---------------------------------------------------------------------------
+# The wall-clock soak: concurrent submitters against a live pump.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_pump_soak_concurrent_submitters_zero_unresolved_zero_recompiles():
+    params, cfg = _cascade()
+    ses = _session(params, cfg, buckets=(8, 16), batch_groups=4,
+                   max_queue=64, flush=FlushPolicy(max_wait_ms=2.0))
+    shapes = ses.warmup()
+    n_compiled = ses._rank._cache_size()
+    assert n_compiled == len(shapes)
+    rng = np.random.default_rng(7)
+    reqs = [_req(i, int(rng.integers(2, 17)), cfg, seed=i)
+            for i in range(80)]
+    with SessionPump(ses) as pump:
+        res = run_wall_clock(pump, reqs, qps=2000.0, deadline_ms=250.0,
+                             n_threads=4, seed=7)
+    # every future resolved with an explicit status — nothing hung, even
+    # across pump shutdown
+    assert res.unresolved == 0
+    assert all(f.done() for f in res.futures)
+    assert {f.result().status for f in res.futures} <= {"ok", "shed"}
+    assert res.completed + res.shed == len(reqs)
+    assert res.completed == len(res.latency_ms)
+    assert (res.latency_ms >= 0).all()
+    # lifecycle accounting closes: submitted = completed + shed
+    assert ses.stats["submitted"] == len(reqs)
+    assert ses.stats["completed"] == res.completed
+    assert ses.stats["shed"] == res.shed + pump.stats["shutdown_shed"]
+    # zero recompiles after warmup under live multi-threaded traffic
+    assert ses._rank._cache_size() == n_compiled
+    # the buffer pool reached steady state: at most one allocation per
+    # (pow2 batch rows, bucket) shape ever happened
+    assert ses.pool.allocated <= len(shapes)

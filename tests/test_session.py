@@ -142,6 +142,35 @@ def test_admission_raise_mode_raises_queuefull():
         ses.submit(_req(2, 4, cfg), now_ms=0.0)
 
 
+def test_admission_accounting_separates_refused_from_shed():
+    """Regression (PR 6): with admission="raise" a refused request used to
+    increment BOTH stats["submitted"] and stats["shed"] before QueueFull
+    was raised, conflating refused-by-raise (no future) with
+    shed-with-future. Refusals now count under stats["refused"] only."""
+    params, cfg = _cascade()
+    # raise mode: 2 admitted, 2 refused — no future, no submitted/shed
+    ses = _session(params, cfg, buckets=(8,), batch_groups=8, max_queue=2,
+                   admission="raise")
+    ses.submit(_req(0, 4, cfg), now_ms=0.0)
+    ses.submit(_req(1, 4, cfg), now_ms=0.0)
+    for i in (2, 3):
+        with pytest.raises(QueueFull):
+            ses.submit(_req(i, 4, cfg), now_ms=0.0)
+    assert ses.stats["submitted"] == 2      # only requests that got futures
+    assert ses.stats["refused"] == 2
+    assert ses.stats["shed"] == 0           # nothing was shed-with-future
+    ses.flush(1.0)
+    assert ses.stats["completed"] == 2
+    # shed mode: the overflow request DOES get a resolved shed future
+    ses2 = _session(params, cfg, buckets=(8,), batch_groups=8, max_queue=2,
+                    admission="shed")
+    futs = [ses2.submit(_req(i, 4, cfg), now_ms=0.0) for i in range(3)]
+    assert futs[2].result().status == STATUS_SHED
+    assert ses2.stats["submitted"] == 3     # all three got futures
+    assert ses2.stats["shed"] == 1
+    assert ses2.stats["refused"] == 0
+
+
 def test_result_before_resolve_raises():
     params, cfg = _cascade()
     ses = _session(params, cfg)
@@ -211,6 +240,76 @@ def test_default_deadline_budget_applies_at_submit():
     assert ses.next_due_ms() == pytest.approx(40.0)
 
 
+def test_deadline_missed_accounts_at_service_completion():
+    """Regression (PR 6): deadline_missed used to be decided at flush
+    START, so a chunk that started before its deadline but finished after
+    was reported on-time (loadgen papered over it with a local re-check,
+    now deleted). Through the claim/execute/resolve seam the driver passes
+    the completion time and the session decides there: service time alone
+    blowing the deadline IS a miss."""
+    params, cfg = _cascade()
+    ses = _session(params, cfg, buckets=(8,), batch_groups=4,
+                   flush=FlushPolicy(max_wait_ms=100.0,
+                                     deadline_slack_ms=5.0))
+    fut = ses.submit(_req(0, 4, cfg), now_ms=0.0, deadline_ms=20.0)
+    # flush starts at 15 — BEFORE the deadline — but service takes 30ms
+    # of (virtual) time, completing at 45 > 20
+    chunk = ses.claim_due(15.0)
+    assert chunk is not None
+    results = ses.execute_chunk(chunk)
+    (resp,) = ses.resolve_chunk(chunk, results, now_ms=15.0, done_ms=45.0)
+    assert resp.deadline_missed          # pre-fix: False (15 <= 20)
+    assert resp.wait_ms == pytest.approx(15.0)       # queue wait to start
+    assert resp.service_ms == pytest.approx(30.0)    # start -> completion
+    assert ses.stats["deadline_missed"] == 1
+    assert fut.result().deadline_missed
+    # same shape, service completing BEFORE the deadline: on-time
+    fut2 = ses.submit(_req(1, 4, cfg), now_ms=100.0, deadline_ms=120.0)
+    chunk = ses.claim_due(115.0)
+    (resp2,) = ses.resolve_chunk(chunk, ses.execute_chunk(chunk),
+                                 now_ms=115.0, done_ms=119.0)
+    assert not resp2.deadline_missed and fut2.done()
+
+
+def test_open_loop_reports_service_blown_deadlines():
+    """End to end through the DES: a deadline tighter than any real
+    service time must be reported missed by the SESSION's response flag
+    (loadgen no longer re-derives it)."""
+    params, cfg = _cascade()
+    ses = _session(params, cfg, buckets=(8,), batch_groups=4,
+                   flush=FlushPolicy(max_wait_ms=5.0,
+                                     deadline_slack_ms=0.0))
+    ses.warmup()
+    reqs = [_req(i, 6, cfg, seed=i) for i in range(4)]
+    # 1e-6 ms budgets: flush can start in time, but ANY measured service
+    # pushes completion past the deadline
+    res = run_open_loop(ses, reqs, qps=1.0, deadline_ms=1e-6, seed=3)
+    assert res.unresolved == 0 and res.completed == len(reqs)
+    assert res.deadline_missed == len(reqs)
+    assert all(f.result().deadline_missed for f in res.futures)
+    assert ses.stats["deadline_missed"] == len(reqs)
+
+
+def test_flush_full_ties_flush_smaller_bucket_first():
+    """Two FULL buckets are both due at -inf (flush_full): next_due_ms()
+    reports -inf and step() must take the SMALLER bucket first — the tie
+    rule _due_ms/step document but nothing exercised."""
+    params, cfg = _cascade()
+    ses = _session(params, cfg, buckets=(8, 16), batch_groups=2,
+                   flush=FlushPolicy(max_wait_ms=100.0, flush_full=True))
+    ses.submit(_req(0, 4, cfg), now_ms=0.0)     # bucket 8
+    ses.submit(_req(1, 12, cfg), now_ms=0.0)    # bucket 16
+    ses.submit(_req(2, 12, cfg), now_ms=0.0)    # bucket 16 now FULL
+    ses.submit(_req(3, 4, cfg), now_ms=0.0)     # bucket 8 now FULL
+    assert ses.next_due_ms() == -np.inf
+    first = ses.step(0.0)
+    assert [r.request_id for r in first] == [0, 3]      # smaller bucket
+    assert ses.next_due_ms() == -np.inf                 # 16 still full-due
+    second = ses.step(0.0)
+    assert [r.request_id for r in second] == [1, 2]
+    assert ses.next_due_ms() is None
+
+
 # ---------------------------------------------------------------------------
 # Degraded modes: watermark hysteresis, recorded degradations.
 # ---------------------------------------------------------------------------
@@ -248,19 +347,45 @@ def test_degraded_mode_hysteresis_and_recorded_degradations():
     assert degraded_lat < f.result().est_latency_ms
 
 
-def test_degraded_shrink_bucket_demotes_and_marks_truncated():
+def test_degraded_shrink_bucket_demotes_without_conflating_truncation():
+    """Regression (PR 6): a request whose n FITS its natural bucket but is
+    demoted by shrink_bucket drops items by DEGRADATION — that must read
+    as degraded=("shrink_bucket",), NOT as truncated, which is reserved
+    for requests exceeding the largest declared bucket. Pre-fix both
+    paths set the same truncated flag and were indistinguishable."""
     params, cfg = _cascade()
     ses = _session(params, cfg, buckets=(8, 16), batch_groups=8,
                    degrade=DegradePolicy(high_watermark=2, low_watermark=0,
                                          mq_scale=1.0, shrink_bucket=True))
     ses.submit(_req(0, 4, cfg), now_ms=0.0)
     ses.submit(_req(1, 4, cfg), now_ms=0.0)
-    # degraded now; a 12-item request would take bucket 16 but is demoted
-    f = ses.submit(_req(2, 12, cfg), now_ms=0.0)
+    # degraded now; a 12-item request FITS bucket 16 but is demoted to 8:
+    # items dropped by degradation, not truncation
+    f_demoted = ses.submit(_req(2, 12, cfg), now_ms=0.0)
+    # a 20-item request exceeds the LARGEST bucket: truly truncated (and,
+    # degraded, also demoted — both flags carry their own cause)
+    f_over = ses.submit(_req(3, 20, cfg), now_ms=0.0)
     ses.flush(1.0)
-    r = f.result()
+    r = f_demoted.result()
     assert "shrink_bucket" in r.degraded
-    assert r.truncated and len(r.scores) == 8
+    assert not r.truncated and len(r.scores) == 8   # demoted, NOT truncated
+    r_over = f_over.result()
+    assert r_over.truncated                         # exceeded largest bucket
+    assert "shrink_bucket" in r_over.degraded
+    assert ses.stats["truncated"] == 1              # only the 20-item one
+
+
+def test_undegraded_truncation_still_surfaced():
+    """The other path: with degradation disabled, only over-largest-bucket
+    requests are truncated; in-bucket requests never are."""
+    params, cfg = _cascade()
+    ses = _session(params, cfg, buckets=(8, 16), batch_groups=4)
+    f_over = ses.submit(_req(0, 20, cfg), now_ms=0.0)
+    f_fit = ses.submit(_req(1, 12, cfg), now_ms=0.0)
+    ses.flush(0.0)
+    assert f_over.result().truncated
+    assert not f_fit.result().truncated
+    assert f_over.result().degraded == () == f_fit.result().degraded
     assert ses.stats["truncated"] == 1
 
 
@@ -354,6 +479,42 @@ def test_open_loop_overload_sheds_and_resolves_everything():
     assert statuses <= {"ok", "shed"}
     # under that pressure the watermark must have engaged at least once
     assert ses.stats["degrade_enters"] >= 1
+
+
+def test_open_loop_empty_request_list_returns_zeroed_result():
+    params, cfg = _cascade()
+    ses = _session(params, cfg, buckets=(8,), batch_groups=4)
+    res = run_open_loop(ses, [], qps=100.0, deadline_ms=10.0)
+    assert res.n_requests == 0 and res.completed == 0
+    assert res.unresolved == 0 and res.shed == 0
+    assert res.sim_s == 0.0 and len(res.latency_ms) == 0
+    assert np.isnan(res.pct(95))
+
+
+def test_open_loop_defensive_branch_when_due_chunk_races_away():
+    """The DES event loop's defensive branch: next_due_ms() promised work
+    but claim_due returned None (in a threaded world the pump may have
+    raced it away). The loop must advance the virtual clock to t_flush
+    and carry on — every future still resolves."""
+    params, cfg = _cascade()
+    ses = _session(params, cfg, buckets=(8,), batch_groups=4,
+                   flush=FlushPolicy(max_wait_ms=5.0))
+    ses.warmup()
+    real_claim = ses.claim_due
+    raced = {"n": 0}
+
+    def flaky_claim(now_ms):
+        if raced["n"] == 0:
+            raced["n"] += 1
+            return None                 # simulate the chunk racing away
+        return real_claim(now_ms)
+
+    ses.claim_due = flaky_claim
+    reqs = [_req(i, 6, cfg, seed=i) for i in range(6)]
+    res = run_open_loop(ses, reqs, qps=1000.0, seed=4)
+    assert raced["n"] == 1              # the branch actually ran
+    assert res.unresolved == 0
+    assert res.completed == len(reqs)
 
 
 def test_open_loop_light_load_sheds_nothing():

@@ -9,7 +9,12 @@ runs on the wall clock instead — a live SessionPump background thread
 with concurrent submitter threads blocking on their futures.
 
     PYTHONPATH=src python examples/cascade_serving.py [--arch qwen3-8b] \
-        [--pump]
+        [--pump] [--chaos]
+
+--chaos turns on seeded fault injection (serving.faults): transient
+executor exceptions retry under capped backoff, poison requests are
+bisected out of their batch and quarantined as status="error", and the
+lifecycle report shows the retry/quarantine counters.
 """
 
 import argparse
@@ -28,6 +33,7 @@ from repro.core import trainer as T
 from repro.data import LogConfig, generate_log
 from repro.serving.batching import RankRequest
 from repro.serving.cascade_server import NeuralScorer
+from repro.serving.faults import FaultConfig, FaultInjector
 from repro.serving.loadgen import run_open_loop
 from repro.serving.pump import SessionPump, run_wall_clock
 from repro.serving.session import (CascadeSession, DegradePolicy,
@@ -43,6 +49,10 @@ def main():
     ap.add_argument("--deadline-ms", type=float, default=130.0)
     ap.add_argument("--pump", action="store_true",
                     help="wall-clock SessionPump instead of the DES")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject faults (transients, latency spikes, NaN "
+                         "corruption, poison requests) — watch retries, "
+                         "quarantine, and explicit error statuses")
     args = ap.parse_args()
 
     log = generate_log(LogConfig(n_queries=600, seed=1))
@@ -54,8 +64,14 @@ def main():
     # watermarks sized so an arrival burst that outruns the neural stage
     # visibly enters degraded mode (skip the neural stage, tighten m_q)
     # and recovers once the queue drains
+    # --chaos: a seeded injector wrapping the execute seam — transient
+    # exceptions retry with backoff, poison requests get bisected out and
+    # quarantined as status="error" while their chunk-mates serve
+    faults = FaultInjector(FaultConfig(
+        transient_rate=0.15, latency_rate=0.05, latency_spike_ms=5.0,
+        corrupt_rate=0.05, poison_rate=0.02, seed=0)) if args.chaos else None
     ses = CascadeSession(
-        params, cfg, neural_stage=neural,
+        params, cfg, neural_stage=neural, faults=faults,
         scfg=ServingConfig(plan="filter", max_queue=64,
                            flush=FlushPolicy(max_wait_ms=5.0),
                            degrade=DegradePolicy(high_watermark=16,
@@ -88,8 +104,13 @@ def main():
     print(f"generated {len(reqs)} requests in {gen_s:.2f}s; offered "
           f"{res.offered_qps:.0f} QPS -> {res.achieved_qps:.0f} QPS achieved "
           f"({clock_note})")
-    print(f"shed {res.shed} ({100*res.shed_frac:.1f}%), degraded "
-          f"{res.degraded}, deadline-missed {res.deadline_missed}")
+    print(f"shed {res.shed} ({100*res.shed_frac:.1f}%), errors {res.errors}, "
+          f"degraded {res.degraded}, deadline-missed {res.deadline_missed}")
+    if faults is not None:
+        st = ses.stats_export()
+        print(f"chaos: injected {st['injected']} -> retries {st['retries']}, "
+              f"quarantined {st['quarantined']}, errors {st['errors']} "
+              f"(every future still resolved explicitly)")
     if len(res.latency_ms):
         print(f"end-to-end latency p50 {res.pct(50):.1f}ms / "
               f"p95 {res.pct(95):.1f}ms (deadline {args.deadline_ms:.0f}ms)")

@@ -64,3 +64,14 @@ timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.serve \
     --pump --requests 60 --qps 400 --report BENCH_pump.json
 test -s BENCH_pump.json || { echo "BENCH_pump.json missing"; exit 1; }
 phase_done "pump soak smoke"
+
+echo "== chaos smoke: injected faults, every future resolves explicitly =="
+# wall-clock pump under a seeded FaultInjector (transients, latency
+# spikes, NaN corruption, poison requests): launch.serve exits nonzero if
+# ANY future never resolves or lifecycle accounting fails to close
+# (submitted = completed + shed + errors)
+rm -f BENCH_chaos.json
+timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.serve \
+    --pump --requests 60 --qps 400 --faults 0.2 --report BENCH_chaos.json
+test -s BENCH_chaos.json || { echo "BENCH_chaos.json missing"; exit 1; }
+phase_done "chaos smoke"

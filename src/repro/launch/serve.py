@@ -41,6 +41,7 @@ from repro.core import trainer as T
 from repro.data import LogConfig, generate_log
 from repro.serving.batching import RankRequest
 from repro.serving.cascade_server import NeuralScorer
+from repro.serving.faults import FaultConfig, FaultInjector
 from repro.serving.loadgen import run_open_loop
 from repro.serving.pump import SessionPump, run_wall_clock
 from repro.serving.session import (CascadeSession, DegradePolicy,
@@ -48,7 +49,8 @@ from repro.serving.session import (CascadeSession, DegradePolicy,
 
 
 def build_session(params, cfg, lcfg=None, *, neural=None, plan="filter",
-                  max_queue=128, max_wait_ms=5.0) -> CascadeSession:
+                  max_queue=128, max_wait_ms=5.0,
+                  faults=None) -> CascadeSession:
     """The launcher's serving profile: bounded queue with load-shedding,
     degradation watermarks derived from the queue bound (enter at 3/4
     capacity, exit at 1/4 — the hysteresis band)."""
@@ -56,11 +58,24 @@ def build_session(params, cfg, lcfg=None, *, neural=None, plan="filter",
                              low_watermark=max_queue // 4)
                if max_queue else DegradePolicy(high_watermark=None))
     return CascadeSession(
-        params, cfg, lcfg, neural_stage=neural,
+        params, cfg, lcfg, neural_stage=neural, faults=faults,
         scfg=ServingConfig(plan=plan,
                            max_queue=max_queue or None,
                            flush=FlushPolicy(max_wait_ms=max_wait_ms),
                            degrade=degrade))
+
+
+def build_injector(rate: float, seed: int) -> FaultInjector | None:
+    """Chaos profile for --faults RATE: transients at the full rate,
+    latency spikes and score corruption at half, poison at a quarter —
+    one knob that exercises every fault class, seeded so a DES chaos run
+    replays deterministically."""
+    if rate <= 0:
+        return None
+    return FaultInjector(FaultConfig(
+        transient_rate=rate, latency_rate=rate / 2,
+        latency_spike_ms=5.0, corrupt_rate=rate / 2,
+        poison_rate=rate / 4, seed=seed))
 
 
 def main() -> None:
@@ -78,6 +93,10 @@ def main() -> None:
                          "submitter threads (default: virtual-clock DES)")
     ap.add_argument("--threads", type=int, default=4,
                     help="submitter threads in --pump mode")
+    ap.add_argument("--faults", type=float, default=0.0,
+                    help="chaos mode: injected-fault rate (transient "
+                         "exceptions, latency spikes, NaN corruption, "
+                         "poison requests; 0 = off)")
     ap.add_argument("--plan", default="filter",
                     help="pipeline plan (core.pipeline.PLANS entry)")
     ap.add_argument("--neural", default="",
@@ -101,9 +120,13 @@ def main() -> None:
                                    dtype=jnp.float32)
         neural = NeuralScorer.create(ncfg, jax.random.PRNGKey(7))
         print(f"[serve] neural final stage: {ncfg.name}")
+    injector = build_injector(args.faults, args.seed)
+    if injector is not None:
+        print(f"[serve] CHAOS MODE: fault injection at rate {args.faults} "
+              f"(seed {args.seed})")
     ses = build_session(params, cfg, neural=neural, plan=args.plan,
                         max_queue=args.max_queue,
-                        max_wait_ms=args.max_wait_ms)
+                        max_wait_ms=args.max_wait_ms, faults=injector)
     t0 = time.time()
     shapes = ses.warmup()
     warmup_s = time.time() - t0
@@ -136,7 +159,7 @@ def main() -> None:
         res = run_wall_clock(pump, reqs, args.qps, deadline_ms=deadline,
                              n_threads=args.threads, seed=args.seed)
         pump.close()
-        pump_stats = dict(pump.stats)
+        pump_stats = pump.stats_export()
         unresolved_after_close = sum(1 for f in res.futures if not f.done())
         print(f"[serve] pump mode: offered {res.offered_qps:.0f} QPS from "
               f"{args.threads} threads; served {res.completed}/"
@@ -153,20 +176,28 @@ def main() -> None:
               f"simulated ({res.achieved_qps:.0f} QPS achieved, "
               f"{res.serve_s:.2f}s compute)")
         serve_s = res.serve_s
-    print(f"[serve] shed {res.shed} ({100*res.shed_frac:.1f}%), degraded "
-          f"{res.degraded}, deadline-missed {res.deadline_missed}, "
-          f"truncated {res.truncated}")
+    print(f"[serve] shed {res.shed} ({100*res.shed_frac:.1f}%), errors "
+          f"{res.errors}, degraded {res.degraded}, deadline-missed "
+          f"{res.deadline_missed}, truncated {res.truncated}")
     if len(res.latency_ms):
         print(f"[serve] end-to-end latency: p50 {res.pct(50):.1f}ms "
               f"p95 {res.pct(95):.1f}ms p99 {res.pct(99):.1f}ms")
-    print(f"[serve] session stats: {ses.stats}")
+    session_stats = ses.stats_export()
+    print(f"[serve] session stats: {session_stats}")
 
     if res.unresolved or unresolved_after_close:
         raise SystemExit(
             f"[serve] FAIL: {max(res.unresolved, unresolved_after_close)} "
             "futures never resolved — every submitted request must come "
             "back with an explicit status")
-    print("[serve] all futures resolved (zero dropped)")
+    st = session_stats
+    if st["submitted"] != st["completed"] + st["shed"] + st["errors"]:
+        raise SystemExit(
+            f"[serve] FAIL: lifecycle accounting does not close — "
+            f"submitted {st['submitted']} != completed {st['completed']} "
+            f"+ shed {st['shed']} + errors {st['errors']}")
+    print("[serve] all futures resolved (zero dropped; "
+          "submitted = completed + shed + errors)")
 
     if args.report:
         report = {
@@ -174,6 +205,7 @@ def main() -> None:
                        "deadline_ms": args.deadline_ms,
                        "max_queue": args.max_queue, "plan": args.plan,
                        "neural": args.neural or None, "seed": args.seed,
+                       "faults": args.faults,
                        "mode": "pump" if args.pump else "des",
                        "threads": args.threads if args.pump else None,
                        "backend": jax.default_backend()},
@@ -181,6 +213,7 @@ def main() -> None:
                          "generate": gen_s, "serve": serve_s},
             "generation_rate_rps": len(reqs) / max(gen_s, 1e-9),
             ("wall_clock" if args.pump else "open_loop"): res.summary(),
+            "session_stats": session_stats,
         }
         if pump_stats is not None:
             report["pump_stats"] = pump_stats

@@ -10,15 +10,20 @@ from repro.serving.batching import (RankRequest, RankResponse,
                                     RequestBatcher, TransferBufferPool,
                                     pack_requests)
 from repro.serving.cascade_server import CascadeServer, NeuralScorer
+from repro.serving.faults import (CorruptOutput, FaultConfig, FaultInjector,
+                                  InjectedFault, PoisonFault,
+                                  TransientFault)
 from repro.serving.loadgen import OpenLoopResult, run_open_loop
 from repro.serving.pump import (SessionPump, WallClockResult,
                                 run_wall_clock)
 from repro.serving.session import (CascadeSession, DegradePolicy,
                                    FlushPolicy, QueueFull, RankFuture,
-                                   ServingConfig)
+                                   RetryPolicy, ServingConfig)
 
-__all__ = ["CascadeServer", "CascadeSession", "DegradePolicy", "FlushPolicy",
-           "NeuralScorer", "OpenLoopResult", "QueueFull", "RankFuture",
-           "RankRequest", "RankResponse", "RequestBatcher", "ServingConfig",
-           "SessionPump", "TransferBufferPool", "WallClockResult",
+__all__ = ["CascadeServer", "CascadeSession", "CorruptOutput",
+           "DegradePolicy", "FaultConfig", "FaultInjector", "FlushPolicy",
+           "InjectedFault", "NeuralScorer", "OpenLoopResult", "PoisonFault",
+           "QueueFull", "RankFuture", "RankRequest", "RankResponse",
+           "RequestBatcher", "RetryPolicy", "ServingConfig", "SessionPump",
+           "TransferBufferPool", "TransientFault", "WallClockResult",
            "pack_requests", "run_open_loop", "run_wall_clock"]

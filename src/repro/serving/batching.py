@@ -36,12 +36,17 @@ class RankResponse:
     # request-lifecycle metadata (serving.session) — every response carries
     # an explicit status instead of silently dropping or truncating work:
     status: str = "ok"          # "ok" | "shed" (admission-control rejection)
+    #                             | "error" (service failed after retries —
+    #                             the future resolves, never hangs)
     degraded: tuple[str, ...] = ()  # degradation modes applied to this request
     truncated: bool = False     # item list exceeded the LARGEST bucket
     deadline_missed: bool = False   # service COMPLETED after the deadline
     wait_ms: float = 0.0        # time spent queued before the flush start
     service_ms: float = 0.0     # flush start -> completion (0 when the
     # driver cannot know service time: explicit-clock step()/flush())
+    error: str | None = None    # status="error": why service failed
+    attempts: int = 1           # execute attempts spent on this request's
+    # chunk (>1 means retries/bisection happened on its path)
 
 
 def bucket_of(n_items: int, buckets: tuple[int, ...]) -> int:

@@ -44,6 +44,7 @@ class OpenLoopResult:
     serve_s: float          # real wall-clock spent in step()/flush compute
     sim_s: float            # virtual span from first arrival to last resolve
     latency_ms: np.ndarray  # per served request: resolve - arrival (virtual)
+    errors: int = 0         # status="error": service failed after retries
     futures: list = dataclasses.field(default_factory=list, repr=False)
 
     @property
@@ -66,6 +67,7 @@ class OpenLoopResult:
             "completed": self.completed,
             "shed": self.shed,
             "shed_frac": self.shed_frac,
+            "errors": self.errors,
             "degraded": self.degraded,
             "deadline_missed": self.deadline_missed,
             "truncated": self.truncated,
@@ -100,7 +102,8 @@ def run_open_loop(session: CascadeSession, reqs: list[RankRequest],
     serve_s = 0.0
     arrival_of: dict[int, float] = {}
     latencies: list[float] = []
-    completions = {"degraded": 0, "deadline_missed": 0, "truncated": 0}
+    completions = {"degraded": 0, "deadline_missed": 0, "truncated": 0,
+                   "errors": 0}
     futures = []
     last_resolve = 0.0
     i = 0
@@ -109,6 +112,11 @@ def run_open_loop(session: CascadeSession, reqs: list[RankRequest],
         nonlocal last_resolve
         last_resolve = max(last_resolve, done_ms)
         for r in resps:
+            if r.status == "error":
+                # service failed after retries (fault injection / a real
+                # executor fault): an explicit outcome, not a completion
+                completions["errors"] += 1
+                continue
             latencies.append(done_ms - arrival_of[r.request_id])
             completions["degraded"] += bool(r.degraded)
             # the session's accounting is resolve-time-consistent (the
@@ -176,4 +184,5 @@ def run_open_loop(session: CascadeSession, reqs: list[RankRequest],
         deadline_missed=completions["deadline_missed"],
         truncated=completions["truncated"],
         unresolved=unresolved, serve_s=serve_s, sim_s=sim_s,
-        latency_ms=np.asarray(latencies), futures=futures)
+        latency_ms=np.asarray(latencies), errors=completions["errors"],
+        futures=futures)

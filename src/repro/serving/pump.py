@@ -56,20 +56,31 @@ class SessionPump:
     `submit()` from any number of threads, `close()` when done."""
 
     def __init__(self, session: CascadeSession, *,
-                 idle_wait_s: float = 0.05, name: str = "cascade-pump"):
+                 idle_wait_s: float = 0.05, name: str = "cascade-pump",
+                 watchdog_interval_s: float = 0.1):
         self.session = session
         self.idle_wait_s = idle_wait_s
+        self.watchdog_interval_s = watchdog_interval_s
         self._wake = threading.Event()
         self._closing = False
         self._drain = False
         self._started = False
+        self._name = name
         # open (claimed, still-staging) chunk per bucket: submit() slots
         # late arrivals into these — guarded by session.lock
         self._open: dict[int, FlushChunk] = {}
         self.stats = {"cycles": 0, "served": 0, "slot_joins": 0,
-                      "shutdown_shed": 0}
+                      "shutdown_shed": 0, "cycle_errors": 0, "restarts": 0}
         self._thread = threading.Thread(target=self._run, name=name,
                                         daemon=True)
+        # Supervision: chunk-level failures are contained inside
+        # _service_cycle (futures resolve as errors, the loop keeps
+        # pumping); a bug in the pump loop ITSELF kills the service
+        # thread, and the watchdog restarts it so queued futures are
+        # never stranded behind a dead thread.
+        self._watch_stop = threading.Event()
+        self._watchdog = threading.Thread(
+            target=self._watch, name=f"{name}-watchdog", daemon=True)
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -78,6 +89,7 @@ class SessionPump:
             raise RuntimeError("pump already started")
         self._started = True
         self._thread.start()
+        self._watchdog.start()
         return self
 
     def __enter__(self) -> "SessionPump":
@@ -101,8 +113,10 @@ class SessionPump:
             self._closing = True
             self._drain = drain
         self._wake.set()
+        self._watch_stop.set()
         if self._started:
             self._thread.join(timeout)
+            self._watchdog.join(timeout)
         # Whatever the thread did not serve (drain=False, or a raced
         # submit that landed after its last cycle) is shed explicitly.
         self.stats["shutdown_shed"] += ses.shed_pending()
@@ -169,29 +183,82 @@ class SessionPump:
             self._service_cycle(claim_at=math.inf if closing else now)
 
     def _service_cycle(self, claim_at: float) -> None:
-        """One continuous-batching cycle through the session's seam."""
+        """One continuous-batching cycle through the session's seam.
+
+        Exception-safe: execute_chunk already turns executor failures
+        into explicit error results, but a bug anywhere else in the
+        pack → resolve seam used to kill the service thread and hang
+        every blocked future forever. Now any escaped exception resolves
+        the claimed chunk's futures with status="error" and the loop
+        keeps pumping; the finally block guarantees the open-chunk
+        registration never leaks (a stale entry in self._open would
+        swallow that bucket's slot-joins into a chunk nobody will ever
+        execute)."""
         ses = self.session
         start = _monotonic_ms()
         chunk = ses.claim_due(claim_at)
         if chunk is None:
             return
         self.stats["cycles"] += 1
-        with ses.lock:
-            if len(chunk.entries) < chunk.capacity and not self._closing:
-                chunk.open = True
-                self._open[chunk.g] = chunk
-        # Stage the claimed rows OUTSIDE the lock: submitters keep
-        # running, and same-bucket arrivals slot-join the open chunk.
-        ses.pack_chunk(chunk)
-        with ses.lock:
-            chunk.open = False
-            self._open.pop(chunk.g, None)
-        ses.pack_chunk(chunk)                   # late joiners' rows
-        results = ses.execute_chunk(chunk)
-        done = _monotonic_ms()
-        resps = ses.resolve_chunk(chunk, results, now_ms=start,
-                                  done_ms=done)
-        self.stats["served"] += len(resps)
+        try:
+            with ses.lock:
+                if (len(chunk.entries) < chunk.capacity
+                        and not self._closing):
+                    chunk.open = True
+                    self._open[chunk.g] = chunk
+            # Stage the claimed rows OUTSIDE the lock: submitters keep
+            # running, and same-bucket arrivals slot-join the open chunk.
+            ses.pack_chunk(chunk)
+            with ses.lock:
+                chunk.open = False
+                if self._open.get(chunk.g) is chunk:
+                    del self._open[chunk.g]
+            ses.pack_chunk(chunk)               # late joiners' rows
+            results = ses.execute_chunk(chunk)
+            done = _monotonic_ms()
+            resps = ses.resolve_chunk(chunk, results, now_ms=start,
+                                      done_ms=done)
+            self.stats["served"] += len(resps)
+        except Exception as e:                  # noqa: BLE001 — contain:
+            # a crashed cycle must cost exactly its own chunk, resolved
+            # with an explicit error, never the service thread
+            self.stats["cycle_errors"] += 1
+            ses.fail_chunk(chunk, e, now_ms=start,
+                           done_ms=_monotonic_ms())
+        finally:
+            with ses.lock:
+                chunk.open = False
+                if self._open.get(chunk.g) is chunk:
+                    del self._open[chunk.g]
+
+    # -- supervision -------------------------------------------------------
+
+    def _watch(self) -> None:
+        """Watchdog: restart the service thread if it ever dies while the
+        pump is open. _service_cycle contains chunk-level failures, so a
+        dead thread means a bug in the pump loop itself — restarting it
+        keeps queued futures from being stranded; close() still sheds
+        whatever remains, so the no-hung-future contract holds either
+        way."""
+        while not self._watch_stop.wait(self.watchdog_interval_s):
+            with self.session.lock:
+                if self._closing:
+                    return
+                dead = self._started and not self._thread.is_alive()
+                if dead:
+                    self.stats["restarts"] += 1
+                    self._thread = threading.Thread(
+                        target=self._run, name=self._name, daemon=True)
+                    self._thread.start()
+
+    def stats_export(self) -> dict:
+        """Pump counters (cycles/served/slot_joins/shutdown_shed/
+        cycle_errors/restarts) plus the wrapped session's full metrics
+        surface (lifecycle, faults, pool allocated/reused)."""
+        out = dict(self.stats)
+        out["running"] = self.running
+        out["session"] = self.session.stats_export()
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -211,6 +278,7 @@ class WallClockResult:
     truncated: int
     wall_s: float           # first submit -> last future resolved
     latency_ms: np.ndarray  # per served request: wait_ms + service_ms
+    errors: int = 0         # status="error": service failed after retries
     futures: list = dataclasses.field(default_factory=list, repr=False)
 
     @property
@@ -234,6 +302,7 @@ class WallClockResult:
             "shed": self.shed,
             "shed_frac": self.shed_frac,
             "unresolved": self.unresolved,
+            "errors": self.errors,
             "degraded": self.degraded,
             "deadline_missed": self.deadline_missed,
             "truncated": self.truncated,
@@ -281,6 +350,7 @@ def run_wall_clock(pump: SessionPump, reqs: list[RankRequest], qps: float,
     wall_s = time.monotonic() - t0
 
     shed = completed = degraded = missed = truncated = unresolved = 0
+    errors = 0
     latencies = []
     for f in futures:
         if not f.done():
@@ -289,6 +359,9 @@ def run_wall_clock(pump: SessionPump, reqs: list[RankRequest], qps: float,
         r = f.result()
         if r.status == "shed":
             shed += 1
+            continue
+        if r.status == "error":
+            errors += 1
             continue
         completed += 1
         latencies.append(r.wait_ms + r.service_ms)
@@ -299,4 +372,4 @@ def run_wall_clock(pump: SessionPump, reqs: list[RankRequest], qps: float,
         offered_qps=qps, n_requests=len(reqs), completed=completed,
         shed=shed, unresolved=unresolved, degraded=degraded,
         deadline_missed=missed, truncated=truncated, wall_s=wall_s,
-        latency_ms=np.asarray(latencies), futures=futures)
+        latency_ms=np.asarray(latencies), errors=errors, futures=futures)

@@ -53,6 +53,7 @@ from repro.serving.batching import (RankRequest, RankResponse,
                                     TransferBufferPool, bucket_of,
                                     pack_into, padded_batch_rows,
                                     warmup_batch_sizes)
+from repro.serving.faults import CorruptOutput, FaultInjector
 
 
 class QueueFull(RuntimeError):
@@ -62,6 +63,7 @@ class QueueFull(RuntimeError):
 
 STATUS_OK = "ok"
 STATUS_SHED = "shed"
+STATUS_ERROR = "error"
 
 DEGRADE_SKIP_NEURAL = "skip_neural"
 DEGRADE_TIGHTEN_MQ = "tighten_m_q"
@@ -93,6 +95,34 @@ class DegradePolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Fault handling around the chunk-execute seam.
+
+    An execute attempt that raises (executor exception, injected fault)
+    or returns corrupt scores (NaN/+Inf — caught by the output guard) is
+    retried up to max_attempts with capped exponential backoff. A chunk
+    that exhausts its retries is BISECTED: each half retries solo, so one
+    poisoned request is isolated and quarantined as status="error" while
+    its chunk-mates serve normally (bisection shapes are the warmed pow2
+    ladder — no recompiles).
+
+    The circuit breaker counts CONSECUTIVE failed attempts session-wide
+    (any success resets it) and feeds the existing degradation ladder
+    before tripping open: at breaker_degrade_after the session behaves as
+    if the queue-depth watermark fired (skip_neural / tighten_m_q /
+    shrink_bucket); at breaker_open_after new submissions are shed while
+    earlier work is still pending — once the queue drains, one probe
+    request is admitted so a recovered executor can close the breaker.
+    None disables that stage of the breaker."""
+    max_attempts: int = 3
+    backoff_ms: float = 1.0         # first retry's sleep
+    backoff_factor: float = 2.0
+    max_backoff_ms: float = 50.0
+    breaker_degrade_after: int | None = 8
+    breaker_open_after: int | None = 32
+
+
+@dataclasses.dataclass(frozen=True)
 class ServingConfig:
     """ONE configuration surface for the serving engine (replaces the
     accreted per-call kwargs: use_fused_kernel/fused/batcher/neural_cost).
@@ -107,6 +137,7 @@ class ServingConfig:
     admission: str = "shed"             # "shed" | "raise"
     flush: FlushPolicy = FlushPolicy()
     degrade: DegradePolicy = DegradePolicy()
+    retry: RetryPolicy = RetryPolicy()
     default_deadline_ms: float | None = None  # relative budget for submit()
     neural_cost: float = 0.84           # Table-1 cost of the neural stage
 
@@ -195,6 +226,8 @@ class FlushChunk:
     packed: int = 0                 # rows already staged into the buffer
     open: bool = False              # pump: accepting slot late-joins
     batch: dict | None = None       # pooled staging buffer once packed
+    mq_applied: bool = False        # mq_scale already folded into the
+    # staged m_q column (must happen exactly once across retry attempts)
 
 
 def _shed_response(req: RankRequest) -> RankResponse:
@@ -209,16 +242,36 @@ def _shed_response(req: RankRequest) -> RankResponse:
     )
 
 
+def _error_response(req: RankRequest, error: str, attempts: int,
+                    **lifecycle) -> RankResponse:
+    return RankResponse(
+        request_id=req.request_id,
+        order=np.empty(0, np.int64),
+        scores=np.empty(0, np.float32),
+        survivors=np.empty(0, bool),
+        est_latency_ms=0.0,
+        stage_counts=[],
+        status=STATUS_ERROR,
+        error=error,
+        attempts=attempts,
+        **lifecycle,
+    )
+
+
 class CascadeSession:
     def __init__(self, params: C.Params, cfg: C.CascadeConfig,
                  lcfg: L.LossConfig | None = None, *,
                  neural_stage=None,
-                 scfg: ServingConfig | None = None):
+                 scfg: ServingConfig | None = None,
+                 faults: FaultInjector | None = None):
         self.params = jax.tree_util.tree_map(jnp.asarray, params)
         self.cfg = cfg
         self.lcfg = lcfg or L.LossConfig()
         self.neural = neural_stage
         self.scfg = scfg or ServingConfig()
+        # Optional chaos hook: a seeded FaultInjector wrapping the execute
+        # seam (faults=None keeps the serving path bit-identical).
+        self.faults = faults
         # Resolve the plan at construction — unknown plans must fail here,
         # with the registry's one shared error, not from inside the first
         # rank_batch trace.
@@ -250,10 +303,19 @@ class CascadeSession:
         # future) — distinct from "shed" (resolved future with
         # status="shed"); "submitted" counts only requests that got a
         # future.
+        # Accounting identity: submitted = completed + shed + errors once
+        # all work is resolved (refused requests never got a future).
         self.stats = {"submitted": 0, "shed": 0, "refused": 0,
                       "completed": 0, "degraded": 0, "deadline_missed": 0,
                       "truncated": 0, "degrade_enters": 0,
-                      "degrade_exits": 0}
+                      "degrade_exits": 0, "faults": 0, "retries": 0,
+                      "errors": 0, "quarantined": 0, "breaker_shed": 0}
+        # Consecutive failed execute attempts, session-wide — the circuit
+        # breaker's input; any successful attempt resets it.
+        self._consec_faults = 0
+        # Backoff sleep, stubable in tests (and measured into virtual
+        # service time by the DES, which times real wall around execute).
+        self._sleep = time.sleep
 
     # -- the jitted pipeline ---------------------------------------------
 
@@ -344,7 +406,18 @@ class CascadeSession:
 
     @property
     def degraded(self) -> bool:
-        return self._degraded_active
+        return self._degraded_active or self._breaker_degraded()
+
+    def _breaker_degraded(self) -> bool:
+        """Consecutive-fault count has reached the degrade stage of the
+        circuit breaker: behave exactly as if the queue-depth watermark
+        fired (a faulting executor sheds expensive work first)."""
+        k = self.scfg.retry.breaker_degrade_after
+        return k is not None and self._consec_faults >= k
+
+    def _breaker_open(self) -> bool:
+        k = self.scfg.retry.breaker_open_after
+        return k is not None and self._consec_faults >= k
 
     def _update_degrade(self) -> None:
         hw = self.scfg.degrade.high_watermark
@@ -373,6 +446,17 @@ class CascadeSession:
         "submitted" increment). Nothing ever queues past max_queue."""
         with self.lock:
             now = self._now(now_ms)
+            # Breaker open: the executor has failed breaker_open_after
+            # consecutive attempts — shed new work instead of queueing it
+            # behind a broken service. Once the backlog drains, admit one
+            # probe so a recovered executor can close the breaker.
+            if self._breaker_open() and self.pending > 0:
+                fut = RankFuture(req.request_id)
+                self.stats["submitted"] += 1
+                self.stats["shed"] += 1
+                self.stats["breaker_shed"] += 1
+                fut._resolve(_shed_response(req))
+                return fut
             mq = self.scfg.max_queue
             if mq is not None and self.pending >= mq:
                 if self.scfg.admission == "raise":
@@ -399,7 +483,7 @@ class CascadeSession:
             degraded: tuple[str, ...] = ()
             n = len(req.item_feats)
             g = self._bucket(n)
-            if (self._degraded_active and self.scfg.degrade.shrink_bucket
+            if (self.degraded and self.scfg.degrade.shrink_bucket
                     and g > self.buckets[0]):
                 g = self.buckets[self.buckets.index(g) - 1]
                 degraded += (DEGRADE_SHRINK_BUCKET,)
@@ -510,7 +594,7 @@ class CascadeSession:
             degrades: tuple[str, ...] = ()
             skip_neural = False
             mq_scale = 1.0
-            if self._degraded_active:
+            if self.degraded:
                 deg = self.scfg.degrade
                 if deg.skip_neural and self.neural is not None:
                     skip_neural = True
@@ -539,27 +623,138 @@ class CascadeSession:
             chunk.packed = n
 
     def execute_chunk(self, chunk: FlushChunk) -> dict:
-        """Pack (if needed) and run the jitted pipeline on the chunk;
-        fetch results to host and release the staging buffer. The slow
-        part — callers that care about concurrency run this OUTSIDE the
-        session lock."""
+        """Fault-tolerant execute: pack (if needed), run the jitted
+        pipeline with retry/backoff around every attempt, guard the
+        fetched outputs against NaN/+Inf corruption, and bisect a chunk
+        whose retries exhaust so one poisoned request is quarantined as
+        status="error" while its chunk-mates serve. The slow part —
+        callers that care about concurrency run this OUTSIDE the session
+        lock.
+
+        Always returns per-entry results (rows [0, len(entries))) with
+        parallel "error"/"attempts" lists — it NEVER raises for an
+        executor failure; resolve_chunk turns error entries into explicit
+        status="error" responses so no future can hang on a fault."""
+        return self._execute_with_retry(chunk)
+
+    def _execute_attempt(self, chunk: FlushChunk) -> dict:
+        """ONE raw attempt: stage rows, run the pipeline, fetch to host.
+        The staging buffer is kept on the chunk across attempts (rows are
+        already packed; m_q scaling applies exactly once) and released by
+        the retry wrapper, never here."""
         chunk.open = False
         self.pack_chunk(chunk)
         batch = chunk.batch
-        if chunk.mq_scale < 1.0:
+        if chunk.mq_scale < 1.0 and not chunk.mq_applied:
             np.maximum(batch["m_q"] * chunk.mq_scale, 1.0,
                        out=batch["m_q"])
+            chunk.mq_applied = True
+        if self.faults is not None:
+            self.faults.on_attempt([e.req.request_id
+                                    for e in chunk.entries])
         res = self.rank_batch(batch, skip_neural=chunk.skip_neural)
+        scores = np.asarray(res["scores"])
+        if self.faults is not None:
+            scores = scores.copy()      # device fetches are read-only;
+            #                             the injector corrupts in place
         out = {
-            "scores": np.asarray(res["scores"]),
+            "scores": scores,
             "survivors": np.asarray(res["survivors"]),
             "lat": np.asarray(res["est_latency_ms"]),
             "stage_counts": np.asarray(res["stage_survivors"].sum(axis=1)),
         }
-        # results fetched -> nothing still reads the staging buffer
-        self.pool.release(batch)
-        chunk.batch = None
+        if self.faults is not None:
+            self.faults.on_results(out, len(chunk.entries))
         return out
+
+    def _guard_results(self, out: dict, n_real: int) -> None:
+        """Corrupt-output guard: scores may legitimately be finite or
+        -inf (filtered items) — a NaN or +Inf score, or a non-finite
+        latency estimate, is silent numeric corruption and is treated
+        exactly like a raised executor fault (retried, then bisected)."""
+        s = out["scores"][:n_real]
+        if (np.isnan(s).any() or np.isposinf(s).any()
+                or not np.isfinite(out["lat"][:n_real]).all()):
+            raise CorruptOutput(
+                "non-finite scores/latency in fetched results")
+
+    def _release_chunk(self, chunk: FlushChunk) -> None:
+        if chunk.batch is not None:
+            # results fetched (or the chunk abandoned) -> nothing still
+            # reads the staging buffer
+            self.pool.release(chunk.batch)
+            chunk.batch = None
+
+    def _subchunk(self, chunk: FlushChunk, entries: list[_Pending]
+                  ) -> FlushChunk:
+        """A bisection half: same bucket and degradation decision, its
+        own pow2-padded capacity (a warmed shape) and fresh buffer."""
+        return FlushChunk(
+            g=chunk.g, entries=list(entries), degrades=chunk.degrades,
+            skip_neural=chunk.skip_neural, mq_scale=chunk.mq_scale,
+            capacity=padded_batch_rows(len(entries),
+                                       self.scfg.batch_groups))
+
+    def _execute_with_retry(self, chunk: FlushChunk) -> dict:
+        pol = self.scfg.retry
+        n = len(chunk.entries)
+        max_attempts = max(1, pol.max_attempts)
+        backoff = pol.backoff_ms
+        last_err: Exception | None = None
+        for attempt in range(1, max_attempts + 1):
+            try:
+                out = self._execute_attempt(chunk)
+                self._guard_results(out, n)
+            except Exception as e:           # noqa: BLE001 — the whole
+                # point: ANY executor failure becomes an explicit outcome
+                last_err = e
+                with self.lock:
+                    self.stats["faults"] += 1
+                    self._consec_faults += 1
+                if attempt < max_attempts:
+                    with self.lock:
+                        self.stats["retries"] += 1
+                    self._sleep(min(backoff, pol.max_backoff_ms) / 1e3)
+                    backoff *= pol.backoff_factor
+                continue
+            with self.lock:
+                self._consec_faults = 0      # any success closes the breaker
+            self._release_chunk(chunk)
+            out = {k: v[:n] for k, v in out.items()}
+            out["error"] = [None] * n
+            out["attempts"] = [attempt] * n
+            return out
+        # Retries exhausted on this chunk.
+        self._release_chunk(chunk)
+        err = f"{type(last_err).__name__}: {last_err}"
+        if n == 1:
+            # Quarantine: bisection has isolated the fault to this single
+            # request (or the chunk was solo to begin with) — resolve it
+            # as an explicit error and let everything else keep serving.
+            with self.lock:
+                self.stats["quarantined"] += 1
+            return {
+                "scores": np.full((1, chunk.g), -np.inf, np.float32),
+                "survivors": np.zeros((1, chunk.g), np.float32),
+                "lat": np.zeros((1,), np.float32),
+                "stage_counts": np.zeros((1, self.cfg.n_stages),
+                                         np.float32),
+                "error": [err],
+                "attempts": [max_attempts],
+            }
+        # Bisect: each half retries solo, so one poison request cannot
+        # take its chunk-mates down with it. Halves pack into the warmed
+        # pow2 shape ladder — no recompiles under quarantine.
+        mid = n // 2
+        out_l = self._execute_with_retry(
+            self._subchunk(chunk, chunk.entries[:mid]))
+        out_r = self._execute_with_retry(
+            self._subchunk(chunk, chunk.entries[mid:]))
+        merged = {k: np.concatenate([out_l[k], out_r[k]])
+                  for k in ("scores", "survivors", "lat", "stage_counts")}
+        merged["error"] = out_l["error"] + out_r["error"]
+        merged["attempts"] = out_l["attempts"] + out_r["attempts"]
+        return merged
 
     def resolve_chunk(self, chunk: FlushChunk, results: dict,
                       now_ms: float, done_ms: float | None = None
@@ -573,13 +768,29 @@ class CascadeSession:
         done = now_ms if done_ms is None else done_ms
         scores, surv = results["scores"], results["survivors"]
         lat, stage_counts = results["lat"], results["stage_counts"]
+        errors = results.get("error") or [None] * len(chunk.entries)
+        attempts = results.get("attempts") or [1] * len(chunk.entries)
         out = []
         with self.lock:
             for i, e in enumerate(chunk.entries):
-                n = len(e.req.item_feats)       # numpy caps slices at g
-                order = np.argsort(-scores[i][:n], kind="stable")
                 degraded = e.degraded + chunk.degrades
                 missed = e.deadline_ms is not None and done > e.deadline_ms
+                if errors[i] is not None:
+                    # service failed after retries/quarantine: the future
+                    # resolves with an explicit error — it never hangs,
+                    # and no exception escapes the seam
+                    resp = _error_response(
+                        e.req, errors[i], attempts[i],
+                        degraded=degraded, truncated=e.truncated,
+                        deadline_missed=missed,
+                        wait_ms=now_ms - e.submit_ms,
+                        service_ms=done - now_ms)
+                    e.future._resolve(resp)
+                    self.stats["errors"] += 1
+                    out.append(resp)
+                    continue
+                n = len(e.req.item_feats)       # numpy caps slices at g
+                order = np.argsort(-scores[i][:n], kind="stable")
                 resp = RankResponse(
                     request_id=e.req.request_id,
                     order=order,
@@ -593,6 +804,7 @@ class CascadeSession:
                     deadline_missed=missed,
                     wait_ms=now_ms - e.submit_ms,
                     service_ms=done - now_ms,
+                    attempts=attempts[i],
                 )
                 e.future._resolve(resp)
                 self.stats["completed"] += 1
@@ -600,6 +812,53 @@ class CascadeSession:
                 self.stats["deadline_missed"] += missed
                 self.stats["truncated"] += e.truncated
                 out.append(resp)
+        return out
+
+    def fail_chunk(self, chunk: FlushChunk, error: Exception,
+                   now_ms: float, done_ms: float | None = None
+                   ) -> list[RankResponse]:
+        """Last-resort containment (pump supervision): an exception
+        escaped the service seam OUTSIDE execute_chunk's own fault
+        handling (a pack bug, a resolver bug). Resolve every still-
+        unresolved future of the claimed chunk with status="error" so
+        the crash cannot hang a caller, and release the staging buffer.
+        Already-resolved entries are left untouched."""
+        self._release_chunk(chunk)
+        done = now_ms if done_ms is None else done_ms
+        err = f"{type(error).__name__}: {error}"
+        out = []
+        with self.lock:
+            for e in chunk.entries:
+                if e.future.done():
+                    continue
+                missed = (e.deadline_ms is not None
+                          and done > e.deadline_ms)
+                resp = _error_response(
+                    e.req, err, 1,
+                    degraded=e.degraded + chunk.degrades,
+                    truncated=e.truncated, deadline_missed=missed,
+                    wait_ms=now_ms - e.submit_ms,
+                    service_ms=done - now_ms)
+                e.future._resolve(resp)
+                self.stats["errors"] += 1
+                out.append(resp)
+        return out
+
+    def stats_export(self) -> dict:
+        """One flat snapshot of the serving metrics surface: lifecycle
+        counters, queue/breaker state, the TransferBufferPool's
+        allocated/reused counters, and (when a FaultInjector is attached)
+        the injected-fault counts — consumed by launch.serve's report and
+        SessionPump.stats_export."""
+        with self.lock:
+            out = dict(self.stats)
+            out["pending"] = self.pending
+            out["degraded_active"] = self.degraded
+            out["consec_faults"] = self._consec_faults
+        out["pool_allocated"] = self.pool.allocated
+        out["pool_reused"] = self.pool.reused
+        if self.faults is not None:
+            out["injected"] = dict(self.faults.stats)
         return out
 
     def shed_pending(self) -> int:

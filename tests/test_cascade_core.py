@@ -137,6 +137,8 @@ def test_latency_conventions(setup):
     assert (np.asarray(lat_enter) > np.asarray(lat_paper)).all()
 
 
+@pytest.mark.slow      # two full loss_l3 grad compiles (~3 s) — deep
+# routing equivalence belongs with the slow equivalence sweeps
 def test_l3_penalties_route_to_query_path_only(setup):
     """UX-penalty gradients must not touch w_x or b (see losses.loss_l3)."""
     cfg, params, x, q = setup

@@ -9,12 +9,16 @@ runs on the wall clock instead — a live SessionPump background thread
 with concurrent submitter threads blocking on their futures.
 
     PYTHONPATH=src python examples/cascade_serving.py [--arch qwen3-8b] \
-        [--pump] [--chaos]
+        [--pump] [--chaos] [--replicas N]
 
 --chaos turns on seeded fault injection (serving.faults): transient
 executor exceptions retry under capped backoff, poison requests are
 bisected out of their batch and quarantined as status="error", and the
 lifecycle report shows the retry/quarantine counters.
+
+--replicas N serves through a ReplicaRouter over N simulated co-located
+replicas (shared warmed jit cache) behind one global admission point —
+least-loaded placement, breaker-driven failover, probe re-admission.
 """
 
 import argparse
@@ -34,8 +38,9 @@ from repro.data import LogConfig, generate_log
 from repro.serving.batching import RankRequest
 from repro.serving.cascade_server import NeuralScorer
 from repro.serving.faults import FaultConfig, FaultInjector
-from repro.serving.loadgen import run_open_loop
+from repro.serving.loadgen import run_open_loop, run_open_loop_router
 from repro.serving.pump import SessionPump, run_wall_clock
+from repro.serving.router import ReplicaRouter, make_replicas
 from repro.serving.session import (CascadeSession, DegradePolicy,
                                    FlushPolicy, ServingConfig)
 
@@ -53,6 +58,9 @@ def main():
                     help="inject faults (transients, latency spikes, NaN "
                          "corruption, poison requests) — watch retries, "
                          "quarantine, and explicit error statuses")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a ReplicaRouter over N simulated "
+                         "replicas (1 = single session)")
     args = ap.parse_args()
 
     log = generate_log(LogConfig(n_queries=600, seed=1))
@@ -67,19 +75,39 @@ def main():
     # --chaos: a seeded injector wrapping the execute seam — transient
     # exceptions retry with backoff, poison requests get bisected out and
     # quarantined as status="error" while their chunk-mates serve
-    faults = FaultInjector(FaultConfig(
-        transient_rate=0.15, latency_rate=0.05, latency_spike_ms=5.0,
-        corrupt_rate=0.05, poison_rate=0.02, seed=0)) if args.chaos else None
-    ses = CascadeSession(
-        params, cfg, neural_stage=neural, faults=faults,
-        scfg=ServingConfig(plan="filter", max_queue=64,
-                           flush=FlushPolicy(max_wait_ms=5.0),
-                           degrade=DegradePolicy(high_watermark=16,
-                                                 low_watermark=4)))
-    t0 = time.time()
-    shapes = ses.warmup()        # compile every serving shape bucket up front
-    print(f"warmed {len(shapes)} shape buckets {shapes} "
-          f"in {time.time() - t0:.1f}s")
+    def injector(seed):
+        return FaultInjector(FaultConfig(
+            transient_rate=0.15, latency_rate=0.05, latency_spike_ms=5.0,
+            corrupt_rate=0.05, poison_rate=0.02,
+            seed=seed)) if args.chaos else None
+
+    scfg = ServingConfig(plan="filter", max_queue=64,
+                         flush=FlushPolicy(max_wait_ms=5.0),
+                         degrade=DegradePolicy(high_watermark=16,
+                                               low_watermark=4))
+    router = None
+    faults = injector(0)
+    if args.replicas > 1:
+        # N simulated replicas behind one admission point; co-located on
+        # this device they share the first replica's warmed jit cache
+        router = ReplicaRouter(make_replicas(
+            params, cfg, n=args.replicas, neural_stage=neural, scfg=scfg,
+            faults=[injector(k) for k in range(args.replicas)]
+            if args.chaos else None))
+        ses = router.replicas[0]
+        faults = ses.faults
+        t0 = time.time()
+        shapes = router.warmup()
+        print(f"warmed {len(shapes)} shape buckets {shapes} across "
+              f"{args.replicas} replicas (shared jit cache) "
+              f"in {time.time() - t0:.1f}s")
+    else:
+        ses = CascadeSession(params, cfg, neural_stage=neural,
+                             faults=faults, scfg=scfg)
+        t0 = time.time()
+        shapes = ses.warmup()    # compile every serving shape bucket up front
+        print(f"warmed {len(shapes)} shape buckets {shapes} "
+              f"in {time.time() - t0:.1f}s")
 
     rng = np.random.default_rng(0)
     n_te = te.x.shape[0]
@@ -92,11 +120,23 @@ def main():
                         m_q=int(te.m_q[qi]))
             for i, qi in enumerate(picks)]
     gen_s = time.time() - t0
-    if args.pump:
+    if args.pump and router is not None:
+        router.attach_pumps([SessionPump(s, name=f"pump-{s.name}").start()
+                             for s in router.replicas])
+        res = run_wall_clock(router, reqs, args.qps,
+                             deadline_ms=args.deadline_ms)
+        router.close()
+        clock_note = f"{res.wall_s:.1f}s wall, {args.replicas} replicas"
+    elif args.pump:
         with SessionPump(ses) as pump:
             res = run_wall_clock(pump, reqs, args.qps,
                                  deadline_ms=args.deadline_ms)
         clock_note = f"{res.wall_s:.1f}s wall"
+    elif router is not None:
+        res = run_open_loop_router(router, reqs, args.qps,
+                                   deadline_ms=args.deadline_ms)
+        router.close()
+        clock_note = f"{res.serve_s:.1f}s compute, {args.replicas} replicas"
     else:
         res = run_open_loop(ses, reqs, args.qps,
                             deadline_ms=args.deadline_ms)
@@ -106,9 +146,24 @@ def main():
           f"({clock_note})")
     print(f"shed {res.shed} ({100*res.shed_frac:.1f}%), errors {res.errors}, "
           f"degraded {res.degraded}, deadline-missed {res.deadline_missed}")
+    if router is not None:
+        rst = router.stats_export()
+        g = rst["global"]
+        print(f"router: routed {rst['routed']} over {args.replicas} "
+              f"replicas, failovers {rst['failovers']}, drained "
+              f"{rst['drained']}, probes {rst['probes']}; global identity "
+              f"submitted {g['submitted']} = completed {g['completed']} + "
+              f"shed {g['shed']} + errors {g['errors']}")
     if faults is not None:
-        st = ses.stats_export()
-        print(f"chaos: injected {st['injected']} -> retries {st['retries']}, "
+        if router is not None:
+            st = router.stats_export()["global"]
+            inj = {k: sum(s["injected"][k] for s in
+                          router.stats_export()["replicas"])
+                   for k in ("transient", "latency", "corrupt", "poison")}
+        else:
+            st = ses.stats_export()
+            inj = st["injected"]
+        print(f"chaos: injected {inj} -> retries {st['retries']}, "
               f"quarantined {st['quarantined']}, errors {st['errors']} "
               f"(every future still resolved explicitly)")
     if len(res.latency_ms):

@@ -75,3 +75,38 @@ timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.serve \
     --pump --requests 60 --qps 400 --faults 0.2 --report BENCH_chaos.json
 test -s BENCH_chaos.json || { echo "BENCH_chaos.json missing"; exit 1; }
 phase_done "chaos smoke"
+
+echo "== router chaos smoke: replica 0 forced dead, survivors absorb =="
+# 2-replica ReplicaRouter with replica 0's executor always faulting: its
+# breaker trips, the backlog drains to the survivor, and launch.serve
+# exits nonzero unless every future resolves AND the GLOBAL accounting
+# identity closes (Σ submitted = Σ completed + shed + errors)
+rm -f BENCH_router.json
+timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.serve \
+    --replicas 2 --kill-replica --requests 60 --qps 400 \
+    --report BENCH_router.json
+test -s BENCH_router.json || { echo "BENCH_router.json missing"; exit 1; }
+phase_done "router chaos smoke"
+
+echo "== serving coverage gate: src/repro/serving floor =="
+# floor grounded at measured-minus-2% (stdlib-trace measurement: 76.5% on
+# the fast serving selection). pytest-cov, when installed (CI), measures
+# with coverage.py whose statement accounting differs slightly — its
+# floor carries a 2-point tool allowance. Either way the gate RUNS; a dev
+# container without pytest-cov falls back to the stdlib tracer, not to
+# skipping. COVERAGE_serving.json is the artifact either way.
+rm -f COVERAGE_serving.json
+if python -c "import pytest_cov" 2>/dev/null; then
+    timeout "${COV_TIMEOUT:-600}" python -m pytest -q -m "not slow" \
+        --cov=repro.serving --cov-report=term \
+        --cov-report=json:COVERAGE_serving.json \
+        --cov-fail-under="${COV_FLOOR:-72}" \
+        tests/test_serving_batching.py tests/test_session.py \
+        tests/test_faults.py tests/test_pump.py tests/test_router.py \
+        tests/test_determinism.py tests/test_arch_smoke.py
+else
+    COV_FLOOR="${COV_FLOOR:-74}" timeout "${COV_TIMEOUT:-600}" \
+        python scripts/measure_serving_cov.py
+fi
+test -s COVERAGE_serving.json || { echo "COVERAGE_serving.json missing"; exit 1; }
+phase_done "serving coverage gate"

@@ -34,6 +34,16 @@ def data_parallel_mesh(batch_groups: int):
     return jax.make_mesh((n,), ("data",))
 
 
+def replica_devices(n: int) -> list:
+    """One device per serving replica, round-robin over the local devices
+    (serving.router.make_replicas). On a one-device box every replica
+    co-locates there — make_replicas then shares a single warmed jit
+    cache across them via pipeline_from — while on a real mesh each
+    replica pins its compute to its own chip."""
+    devs = jax.devices()
+    return [devs[k % len(devs)] for k in range(n)]
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes carrying batch parallelism."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -39,30 +39,67 @@ from repro.core import baselines as B
 from repro.core import losses as L
 from repro.core import trainer as T
 from repro.data import LogConfig, generate_log
+from repro.launch.mesh import replica_devices
 from repro.serving.batching import RankRequest
 from repro.serving.cascade_server import NeuralScorer
 from repro.serving.faults import FaultConfig, FaultInjector
-from repro.serving.loadgen import run_open_loop
+from repro.serving.loadgen import run_open_loop, run_open_loop_router
 from repro.serving.pump import SessionPump, run_wall_clock
+from repro.serving.router import ReplicaRouter, RouterConfig, make_replicas
 from repro.serving.session import (CascadeSession, DegradePolicy,
                                    FlushPolicy, ServingConfig)
+
+
+def build_serving_config(*, plan="filter", max_queue=128,
+                         max_wait_ms=5.0) -> ServingConfig:
+    """The launcher's serving profile: bounded queue with load-shedding,
+    degradation watermarks derived from the queue bound (enter at 3/4
+    capacity, exit at 1/4 — the hysteresis band). Under a router the same
+    bound and watermarks apply to the GLOBAL depth — one admission
+    controller over the fleet."""
+    degrade = (DegradePolicy(high_watermark=max(1, (3 * max_queue) // 4),
+                             low_watermark=max_queue // 4)
+               if max_queue else DegradePolicy(high_watermark=None))
+    return ServingConfig(plan=plan,
+                         max_queue=max_queue or None,
+                         flush=FlushPolicy(max_wait_ms=max_wait_ms),
+                         degrade=degrade)
 
 
 def build_session(params, cfg, lcfg=None, *, neural=None, plan="filter",
                   max_queue=128, max_wait_ms=5.0,
                   faults=None) -> CascadeSession:
-    """The launcher's serving profile: bounded queue with load-shedding,
-    degradation watermarks derived from the queue bound (enter at 3/4
-    capacity, exit at 1/4 — the hysteresis band)."""
-    degrade = (DegradePolicy(high_watermark=max(1, (3 * max_queue) // 4),
-                             low_watermark=max_queue // 4)
-               if max_queue else DegradePolicy(high_watermark=None))
     return CascadeSession(
         params, cfg, lcfg, neural_stage=neural, faults=faults,
-        scfg=ServingConfig(plan=plan,
-                           max_queue=max_queue or None,
-                           flush=FlushPolicy(max_wait_ms=max_wait_ms),
-                           degrade=degrade))
+        scfg=build_serving_config(plan=plan, max_queue=max_queue,
+                                  max_wait_ms=max_wait_ms))
+
+
+def build_router(params, cfg, lcfg=None, *, n, neural=None, plan="filter",
+                 max_queue=128, max_wait_ms=5.0, fault_rate=0.0,
+                 kill_replica=False, seed=0) -> ReplicaRouter:
+    """N replicas behind one admission point, each pinned to a device of
+    the local fleet (round-robin; on a one-device box they co-locate and
+    share a warmed jit cache). --faults gives every replica its own
+    seeded injector (seed+k: independent fault streams, reproducible);
+    --kill-replica gives replica 0 an always-failing executor instead, so
+    the chaos smoke exercises breaker-open failover: its backlog must
+    drain to survivors and the run must still exit zero."""
+    scfg = build_serving_config(plan=plan, max_queue=max_queue,
+                                max_wait_ms=max_wait_ms)
+    faults: list[FaultInjector | None] | None = None
+    if kill_replica:
+        faults = [FaultInjector(FaultConfig(transient_rate=1.0,
+                                            seed=seed))]
+        faults += [build_injector(fault_rate, seed + 1 + k)
+                   for k in range(n - 1)]
+    elif fault_rate > 0:
+        faults = [build_injector(fault_rate, seed + k) for k in range(n)]
+    return ReplicaRouter(
+        make_replicas(params, cfg, lcfg, n, neural_stage=neural,
+                      scfg=scfg, faults=faults,
+                      devices=replica_devices(n)),
+        RouterConfig())
 
 
 def build_injector(rate: float, seed: int) -> FaultInjector | None:
@@ -93,6 +130,13 @@ def main() -> None:
                          "submitter threads (default: virtual-clock DES)")
     ap.add_argument("--threads", type=int, default=4,
                     help="submitter threads in --pump mode")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a ReplicaRouter over N replica "
+                         "sessions (1 = the single-session path)")
+    ap.add_argument("--kill-replica", action="store_true",
+                    help="chaos smoke: replica 0's executor always fails "
+                         "— the router must fail it over and the run "
+                         "must still exit zero (requires --replicas > 1)")
     ap.add_argument("--faults", type=float, default=0.0,
                     help="chaos mode: injected-fault rate (transient "
                          "exceptions, latency spikes, NaN corruption, "
@@ -120,17 +164,41 @@ def main() -> None:
                                    dtype=jnp.float32)
         neural = NeuralScorer.create(ncfg, jax.random.PRNGKey(7))
         print(f"[serve] neural final stage: {ncfg.name}")
-    injector = build_injector(args.faults, args.seed)
-    if injector is not None:
-        print(f"[serve] CHAOS MODE: fault injection at rate {args.faults} "
-              f"(seed {args.seed})")
-    ses = build_session(params, cfg, neural=neural, plan=args.plan,
-                        max_queue=args.max_queue,
-                        max_wait_ms=args.max_wait_ms, faults=injector)
-    t0 = time.time()
-    shapes = ses.warmup()
-    warmup_s = time.time() - t0
-    print(f"[serve] warmed {len(shapes)} shape buckets in {warmup_s:.1f}s")
+    if args.kill_replica and args.replicas < 2:
+        raise SystemExit("[serve] --kill-replica needs --replicas >= 2 "
+                         "(a survivor must exist to absorb the backlog)")
+    router = None
+    if args.replicas > 1:
+        if args.faults > 0 or args.kill_replica:
+            print(f"[serve] CHAOS MODE: rate {args.faults}"
+                  + (", replica 0 FORCED DEAD" if args.kill_replica else "")
+                  + f" (seed {args.seed})")
+        router = build_router(params, cfg, n=args.replicas, neural=neural,
+                              plan=args.plan, max_queue=args.max_queue,
+                              max_wait_ms=args.max_wait_ms,
+                              fault_rate=args.faults,
+                              kill_replica=args.kill_replica,
+                              seed=args.seed)
+        ses = router.replicas[0]
+        t0 = time.time()
+        shapes = router.warmup()
+        warmup_s = time.time() - t0
+        print(f"[serve] warmed {len(shapes)} shape buckets across "
+              f"{args.replicas} replicas in {warmup_s:.1f}s "
+              "(co-located replicas share one jit cache)")
+    else:
+        injector = build_injector(args.faults, args.seed)
+        if injector is not None:
+            print(f"[serve] CHAOS MODE: fault injection at rate "
+                  f"{args.faults} (seed {args.seed})")
+        ses = build_session(params, cfg, neural=neural, plan=args.plan,
+                            max_queue=args.max_queue,
+                            max_wait_ms=args.max_wait_ms, faults=injector)
+        t0 = time.time()
+        shapes = ses.warmup()
+        warmup_s = time.time() - t0
+        print(f"[serve] warmed {len(shapes)} shape buckets in "
+              f"{warmup_s:.1f}s")
 
     # -- request generation, timed on its own (NOT charged to the server) --
     rng = np.random.default_rng(args.seed)
@@ -154,7 +222,22 @@ def main() -> None:
     # -- the serve phase: wall-clock pump or virtual-clock DES -------------
     deadline = args.deadline_ms if args.deadline_ms > 0 else None
     pump_stats = None
-    if args.pump:
+    router_stats = None
+    if args.pump and router is not None:
+        pumps = [SessionPump(s, name=f"pump-{s.name}").start()
+                 for s in router.replicas]
+        router.attach_pumps(pumps)
+        res = run_wall_clock(router, reqs, args.qps, deadline_ms=deadline,
+                             n_threads=args.threads, seed=args.seed)
+        router.close()
+        router_stats = router.stats_export()
+        unresolved_after_close = sum(1 for f in res.futures if not f.done())
+        print(f"[serve] router pump mode: offered {res.offered_qps:.0f} "
+              f"QPS from {args.threads} threads over {args.replicas} "
+              f"replicas; served {res.completed}/{res.n_requests} in "
+              f"{res.wall_s:.2f}s wall ({res.achieved_qps:.0f} QPS)")
+        serve_s = res.wall_s
+    elif args.pump:
         pump = SessionPump(ses).start()
         res = run_wall_clock(pump, reqs, args.qps, deadline_ms=deadline,
                              n_threads=args.threads, seed=args.seed)
@@ -167,6 +250,18 @@ def main() -> None:
               f"({res.achieved_qps:.0f} QPS achieved)")
         print(f"[serve] pump stats: {pump_stats}")
         serve_s = res.wall_s
+    elif router is not None:
+        res = run_open_loop_router(router, reqs, args.qps,
+                                   deadline_ms=deadline, seed=args.seed)
+        router.close()
+        router_stats = router.stats_export()
+        unresolved_after_close = res.unresolved
+        print(f"[serve] router DES: offered {res.offered_qps:.0f} QPS over "
+              f"{args.replicas} replicas; served {res.completed}/"
+              f"{res.n_requests} over {res.sim_s:.2f}s simulated "
+              f"({res.achieved_qps:.0f} QPS achieved, {res.serve_s:.2f}s "
+              "compute)")
+        serve_s = res.serve_s
     else:
         res = run_open_loop(ses, reqs, args.qps, deadline_ms=deadline,
                             seed=args.seed)
@@ -182,7 +277,14 @@ def main() -> None:
     if len(res.latency_ms):
         print(f"[serve] end-to-end latency: p50 {res.pct(50):.1f}ms "
               f"p95 {res.pct(95):.1f}ms p99 {res.pct(99):.1f}ms")
-    session_stats = ses.stats_export()
+    if router_stats is not None:
+        print(f"[serve] router stats: "
+              f"{ {k: router_stats[k] for k in ('routed', 'failovers', 'drained', 'probes', 'recoveries', 'failed')} }")
+        session_stats = router_stats["global"]
+    else:
+        # snapshot taken inside stats_export under the session lock —
+        # a still-live pump thread cannot tear the counters mid-read
+        session_stats = ses.stats_export()
     print(f"[serve] session stats: {session_stats}")
 
     if res.unresolved or unresolved_after_close:
@@ -191,13 +293,18 @@ def main() -> None:
             "futures never resolved — every submitted request must come "
             "back with an explicit status")
     st = session_stats
+    # GLOBAL accounting identity: over the whole fleet (or the single
+    # session), every admitted request ends in exactly one terminal state.
+    # Work drained off a dead replica completes on a survivor, so the
+    # drained/adopted legs cancel in the aggregate.
     if st["submitted"] != st["completed"] + st["shed"] + st["errors"]:
         raise SystemExit(
             f"[serve] FAIL: lifecycle accounting does not close — "
             f"submitted {st['submitted']} != completed {st['completed']} "
             f"+ shed {st['shed']} + errors {st['errors']}")
     print("[serve] all futures resolved (zero dropped; "
-          "submitted = completed + shed + errors)")
+          "submitted = completed + shed + errors"
+          + (" globally across replicas)" if router_stats else ")"))
 
     if args.report:
         report = {
@@ -206,6 +313,8 @@ def main() -> None:
                        "max_queue": args.max_queue, "plan": args.plan,
                        "neural": args.neural or None, "seed": args.seed,
                        "faults": args.faults,
+                       "replicas": args.replicas,
+                       "kill_replica": args.kill_replica,
                        "mode": "pump" if args.pump else "des",
                        "threads": args.threads if args.pump else None,
                        "backend": jax.default_backend()},
@@ -217,6 +326,8 @@ def main() -> None:
         }
         if pump_stats is not None:
             report["pump_stats"] = pump_stats
+        if router_stats is not None:
+            report["router_stats"] = router_stats
         with open(args.report, "w") as f:
             json.dump(report, f, indent=2)
         print(f"[serve] wrote {args.report}")

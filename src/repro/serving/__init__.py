@@ -1,10 +1,12 @@
 """Serving layer: the streaming CascadeSession engine (request lifecycle
 with deadlines, flush policy, admission control, degraded modes), the
 real-time SessionPump (wall-clock continuous batching, thread-safe
-submit, blocking futures), the CascadeServer compatibility shim, request
-batching with a pinned transfer-buffer pool, and the open-loop load
-generators (virtual-clock DES + wall-clock). See README.md "Serving
-quickstart"."""
+submit, blocking futures), the multi-replica ReplicaRouter (least-loaded
+placement, global admission, breaker-driven failover with probe
+re-admission), the CascadeServer compatibility shim, request batching
+with a pinned transfer-buffer pool, and the open-loop load generators
+(virtual-clock DES, single- and multi-replica, + wall-clock). See
+README.md "Serving quickstart" and "Scaling out"."""
 
 from repro.serving.batching import (RankRequest, RankResponse,
                                     RequestBatcher, TransferBufferPool,
@@ -13,9 +15,12 @@ from repro.serving.cascade_server import CascadeServer, NeuralScorer
 from repro.serving.faults import (CorruptOutput, FaultConfig, FaultInjector,
                                   InjectedFault, PoisonFault,
                                   TransientFault)
-from repro.serving.loadgen import OpenLoopResult, run_open_loop
+from repro.serving.loadgen import (OpenLoopResult, run_open_loop,
+                                   run_open_loop_router)
 from repro.serving.pump import (SessionPump, WallClockResult,
                                 run_wall_clock)
+from repro.serving.router import (ReplicaRouter, RouterConfig,
+                                  make_replicas)
 from repro.serving.session import (CascadeSession, DegradePolicy,
                                    FlushPolicy, QueueFull, RankFuture,
                                    RetryPolicy, ServingConfig)
@@ -24,6 +29,8 @@ __all__ = ["CascadeServer", "CascadeSession", "CorruptOutput",
            "DegradePolicy", "FaultConfig", "FaultInjector", "FlushPolicy",
            "InjectedFault", "NeuralScorer", "OpenLoopResult", "PoisonFault",
            "QueueFull", "RankFuture", "RankRequest", "RankResponse",
-           "RequestBatcher", "RetryPolicy", "ServingConfig", "SessionPump",
-           "TransferBufferPool", "TransientFault", "WallClockResult",
-           "pack_requests", "run_open_loop", "run_wall_clock"]
+           "ReplicaRouter", "RequestBatcher", "RetryPolicy", "RouterConfig",
+           "ServingConfig", "SessionPump", "TransferBufferPool",
+           "TransientFault", "WallClockResult", "make_replicas",
+           "pack_requests", "run_open_loop", "run_open_loop_router",
+           "run_wall_clock"]

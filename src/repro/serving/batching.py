@@ -153,13 +153,24 @@ class TransferBufferPool:
         with self._lock:
             free = self._free.get((b, g))
             batch = free.pop() if free else None
+            # counters mutate under the pool lock: concurrent acquirers
+            # (per-replica pumps behind one router) must never lose an
+            # increment, and stats_export snapshots must not tear
+            if batch is None:
+                self.allocated += 1
+            else:
+                self.reused += 1
         if batch is None:
-            self.allocated += 1
             return alloc_batch(b, g, self.d_x, self.d_q)
-        self.reused += 1
         for v in batch.values():
             v[...] = 0.0
         return batch
+
+    def snapshot(self) -> dict:
+        """Consistent point-in-time read of the pool counters (taken under
+        the pool lock — a live pump may be acquiring concurrently)."""
+        with self._lock:
+            return {"allocated": self.allocated, "reused": self.reused}
 
     def release(self, batch: dict) -> None:
         """Return a buffer once its device results have been fetched —

@@ -117,6 +117,13 @@ class FaultInjector:
         return (cfg.poison_rate > 0.0
                 and _hash01(request_id, cfg.seed) < cfg.poison_rate)
 
+    def snapshot(self) -> dict:
+        """Consistent point-in-time copy of the per-class fault counts,
+        taken under the injector lock (a live pump thread may be mid-draw
+        while a reporter reads)."""
+        with self._lock:
+            return dict(self.stats)
+
     def on_attempt(self, request_ids: list[int]) -> None:
         """Pre-execute hook: poison check (deterministic, rng-free) first,
         then latency spike, then transient fault — each an independent

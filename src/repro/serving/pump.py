@@ -119,7 +119,16 @@ class SessionPump:
             self._watchdog.join(timeout)
         # Whatever the thread did not serve (drain=False, or a raced
         # submit that landed after its last cycle) is shed explicitly.
-        self.stats["shutdown_shed"] += ses.shed_pending()
+        n_shed = ses.shed_pending()
+        with ses.lock:
+            self.stats["shutdown_shed"] += n_shed
+
+    def wake(self) -> None:
+        """Kick the pump thread out of its idle/due-time sleep — the
+        router calls this after grafting drained entries into this pump's
+        session (adopt_entries bypasses submit(), so nothing else would
+        wake the thread before its idle timeout)."""
+        self._wake.set()
 
     # -- submission --------------------------------------------------------
 
@@ -155,6 +164,9 @@ class SessionPump:
         queue = self.session._pending[fut.bucket]
         assert queue and queue[-1].future is fut
         chunk.entries.append(queue.pop())
+        # pending -> inflight, same as claim_bucket: the entry left the
+        # queue for a claimed chunk, and the snapshot identity must see it
+        self.session.stats["inflight"] += 1
         self.stats["slot_joins"] += 1
 
     # -- the pump loop -----------------------------------------------------
@@ -199,9 +211,9 @@ class SessionPump:
         chunk = ses.claim_due(claim_at)
         if chunk is None:
             return
-        self.stats["cycles"] += 1
         try:
             with ses.lock:
+                self.stats["cycles"] += 1
                 if (len(chunk.entries) < chunk.capacity
                         and not self._closing):
                     chunk.open = True
@@ -218,11 +230,13 @@ class SessionPump:
             done = _monotonic_ms()
             resps = ses.resolve_chunk(chunk, results, now_ms=start,
                                       done_ms=done)
-            self.stats["served"] += len(resps)
+            with ses.lock:
+                self.stats["served"] += len(resps)
         except Exception as e:                  # noqa: BLE001 — contain:
             # a crashed cycle must cost exactly its own chunk, resolved
             # with an explicit error, never the service thread
-            self.stats["cycle_errors"] += 1
+            with ses.lock:
+                self.stats["cycle_errors"] += 1
             ses.fail_chunk(chunk, e, now_ms=start,
                            done_ms=_monotonic_ms())
         finally:
@@ -254,8 +268,11 @@ class SessionPump:
     def stats_export(self) -> dict:
         """Pump counters (cycles/served/slot_joins/shutdown_shed/
         cycle_errors/restarts) plus the wrapped session's full metrics
-        surface (lifecycle, faults, pool allocated/reused)."""
-        out = dict(self.stats)
+        surface (lifecycle, faults, pool allocated/reused). The pump
+        counters are copied under the session lock — every mutation site
+        holds it, so a live reporter cannot read a half-updated cycle."""
+        with self.session.lock:
+            out = dict(self.stats)
         out["running"] = self.running
         out["session"] = self.session.stats_export()
         return out

@@ -37,6 +37,7 @@ CascadeServer.serve().
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import threading
@@ -263,12 +264,23 @@ class CascadeSession:
                  lcfg: L.LossConfig | None = None, *,
                  neural_stage=None,
                  scfg: ServingConfig | None = None,
-                 faults: FaultInjector | None = None):
+                 faults: FaultInjector | None = None,
+                 name: str = "session",
+                 device=None,
+                 pipeline_from: "CascadeSession | None" = None):
         self.params = jax.tree_util.tree_map(jnp.asarray, params)
         self.cfg = cfg
         self.lcfg = lcfg or L.LossConfig()
         self.neural = neural_stage
         self.scfg = scfg or ServingConfig()
+        # Replica identity (the router's per-replica stats seam) and an
+        # optional device pin: a replica bound to one device of a local
+        # mesh keeps its compute there (launch.mesh.replica_devices);
+        # device=None serves on the default device as always.
+        self.name = name
+        self.device = device
+        if device is not None:
+            self.params = jax.device_put(self.params, device)
         # Optional chaos hook: a seeded FaultInjector wrapping the execute
         # seam (faults=None keeps the serving path bit-identical).
         self.faults = faults
@@ -281,13 +293,28 @@ class CascadeSession:
         # buffers can alias an output shape; donating x/q would just warn
         # (donation is unsupported on CPU altogether).
         self._donates = jax.default_backend() != "cpu"
-        self._rank = self._make_rank(with_neural=True)
-        # The degraded pipeline drops the neural stage; it only exists as a
-        # distinct compilation when there is a neural stage to skip.
-        if self.neural is not None and self.scfg.degrade.skip_neural:
-            self._rank_noneural = self._make_rank(with_neural=False)
+        if pipeline_from is not None:
+            # Simulated co-located replicas share ONE warmed jit cache:
+            # same params/plan/neural stage -> bit-identical compute, and
+            # N replicas on one device warm up exactly once. A replica on
+            # its own device must compile its own pipeline instead.
+            if (pipeline_from.scfg.plan != self.scfg.plan
+                    or pipeline_from.neural is not self.neural
+                    or pipeline_from.device is not self.device):
+                raise ValueError(
+                    "pipeline_from requires the same plan, neural stage "
+                    "and device as the donor session")
+            self._rank = pipeline_from._rank
+            self._rank_noneural = pipeline_from._rank_noneural
         else:
-            self._rank_noneural = self._rank
+            self._rank = self._make_rank(with_neural=True)
+            # The degraded pipeline drops the neural stage; it only exists
+            # as a distinct compilation when there is a neural stage to
+            # skip.
+            if self.neural is not None and self.scfg.degrade.skip_neural:
+                self._rank_noneural = self._make_rank(with_neural=False)
+            else:
+                self._rank_noneural = self._rank
         self._pending: dict[int, list[_Pending]] = {g: [] for g in self.buckets}
         self._degraded_active = False
         # ONE lock around admission + the pending queues + resolution. The
@@ -305,11 +332,24 @@ class CascadeSession:
         # future.
         # Accounting identity: submitted = completed + shed + errors once
         # all work is resolved (refused requests never got a future).
+        # "inflight" counts entries claimed into a chunk but not yet
+        # resolved: claim_bucket moves them out of pending and into
+        # inflight under ONE lock hold, resolve/fail move them out, so a
+        # stats_export snapshot always satisfies
+        #   submitted = completed + shed + errors + pending + inflight
+        # — the atomic-snapshot identity a live reporter can assert. It is
+        # also the router's in-flight load signal for replica placement.
         self.stats = {"submitted": 0, "shed": 0, "refused": 0,
                       "completed": 0, "degraded": 0, "deadline_missed": 0,
                       "truncated": 0, "degrade_enters": 0,
                       "degrade_exits": 0, "faults": 0, "retries": 0,
-                      "errors": 0, "quarantined": 0, "breaker_shed": 0}
+                      "errors": 0, "quarantined": 0, "breaker_shed": 0,
+                      "inflight": 0, "drained": 0, "adopted": 0}
+        # Global-depth hook (the replica router): when set, bounded
+        # admission and the degradation watermarks judge THIS callable's
+        # depth instead of the local queue — one admission controller over
+        # N replicas. Must be safe to call without the session lock.
+        self.depth_fn = None
         # Consecutive failed execute attempts, session-wide — the circuit
         # breaker's input; any successful attempt resets it.
         self._consec_faults = 0
@@ -367,10 +407,16 @@ class CascadeSession:
                 return jnp.array(v, jnp.float32, copy=True)
             return jnp.asarray(v, jnp.float32)
         rank = self._rank_noneural if skip_neural else self._rank
-        return rank(self.params,
-                    jnp.asarray(batch["x"], jnp.float32),
-                    jnp.asarray(batch["q"], jnp.float32),
-                    dev(batch["mask"]), dev(batch["m_q"]))
+        # A device-pinned replica keeps its compute (and the host->device
+        # copies below) on ITS device of the local mesh; unpinned sessions
+        # serve on the default device exactly as before.
+        ctx = (jax.default_device(self.device) if self.device is not None
+               else contextlib.nullcontext())
+        with ctx:
+            return rank(self.params,
+                        jnp.asarray(batch["x"], jnp.float32),
+                        jnp.asarray(batch["q"], jnp.float32),
+                        dev(batch["mask"]), dev(batch["m_q"]))
 
     def warmup(self) -> list[tuple[int, int]]:
         """Pre-compile the pipeline for every serving shape — each (b, g)
@@ -404,6 +450,21 @@ class CascadeSession:
     def pending(self) -> int:
         return sum(len(v) for v in self._pending.values())
 
+    def queue_depth(self) -> int:
+        """Local pending depth WITHOUT taking the session lock: list len()
+        is GIL-atomic, so this is a safe (if instantaneously approximate)
+        read. The router's global depth_fn aggregates this across replicas
+        from inside a replica's submit path, where taking a SECOND session
+        lock could deadlock two concurrent submitters (A holds lock_A and
+        wants lock_B while B holds lock_B and wants lock_A)."""
+        return sum(len(v) for v in self._pending.values())
+
+    def _depth(self) -> int:
+        """Effective depth for admission and the degradation watermarks:
+        the router's GLOBAL depth when the hook is set (one admission
+        controller over N replicas), else the local queue."""
+        return self.pending if self.depth_fn is None else int(self.depth_fn())
+
     @property
     def degraded(self) -> bool:
         return self._degraded_active or self._breaker_degraded()
@@ -423,7 +484,7 @@ class CascadeSession:
         hw = self.scfg.degrade.high_watermark
         if hw is None:
             return
-        depth = self.pending
+        depth = self._depth()
         if not self._degraded_active and depth >= hw:
             self._degraded_active = True
             self.stats["degrade_enters"] += 1
@@ -458,7 +519,7 @@ class CascadeSession:
                 fut._resolve(_shed_response(req))
                 return fut
             mq = self.scfg.max_queue
-            if mq is not None and self.pending >= mq:
+            if mq is not None and self._depth() >= mq:
                 if self.scfg.admission == "raise":
                     # Refused-by-raise is NOT a shed-with-future: the
                     # caller gets an exception instead of a future, so it
@@ -591,6 +652,9 @@ class CascadeSession:
             if not entries:
                 return None
             del self._pending[g][:len(entries)]
+            # pending -> inflight under ONE lock hold: the atomic-snapshot
+            # identity (see stats init) must hold at every instant
+            self.stats["inflight"] += len(entries)
             degrades: tuple[str, ...] = ()
             skip_neural = False
             mq_scale = 1.0
@@ -773,6 +837,7 @@ class CascadeSession:
         out = []
         with self.lock:
             for i, e in enumerate(chunk.entries):
+                self.stats["inflight"] -= 1
                 degraded = e.degraded + chunk.degrades
                 missed = e.deadline_ms is not None and done > e.deadline_ms
                 if errors[i] is not None:
@@ -831,6 +896,7 @@ class CascadeSession:
             for e in chunk.entries:
                 if e.future.done():
                     continue
+                self.stats["inflight"] -= 1
                 missed = (e.deadline_ms is not None
                           and done > e.deadline_ms)
                 resp = _error_response(
@@ -844,21 +910,73 @@ class CascadeSession:
                 out.append(resp)
         return out
 
+    # -- failover seams (serving.router) -----------------------------------
+
+    def takeover_pending(self) -> dict[int, list[_Pending]]:
+        """Atomically pop EVERY queued entry, by bucket — the router's
+        failover drain. When this replica's breaker trips open its backlog
+        moves to survivors instead of stranding behind a broken executor;
+        futures travel WITH their entries (each resolves on whichever
+        replica serves it). Entries already claimed into a chunk
+        (inflight) are not touched — the driver that claimed them still
+        resolves or fails them here. Counted under stats["drained"] so the
+        per-replica snapshot identity stays closed:
+          submitted + adopted = completed + shed + errors
+                                + pending + inflight + drained
+        (globally Σ adopted == Σ drained, so the router-wide identity
+        reduces to the plain one)."""
+        with self.lock:
+            out: dict[int, list[_Pending]] = {}
+            n = 0
+            for g in self.buckets:
+                if self._pending[g]:
+                    out[g] = self._pending[g]
+                    self._pending[g] = []
+                    n += len(out[g])
+            self.stats["drained"] += n
+            return out
+
+    def adopt_entries(self, g: int, entries: list[_Pending]) -> int:
+        """Graft entries drained from a failed replica onto the FRONT of
+        this replica's bucket-g queue: they are senior to anything queued
+        locally, so FIFO order is preserved across the drain and adopted
+        work is re-claimed through the normal claim_*/pack seams — same
+        shapes (the warmed pow2 ladder, zero recompiles), bit-identical
+        results. A bucket this replica does not serve falls back to the
+        largest local bucket, exactly like local admission."""
+        if not entries:
+            return 0
+        with self.lock:
+            gg = g if g in self._pending else self.buckets[-1]
+            self._pending[gg][:0] = entries
+            self.stats["adopted"] += len(entries)
+            return len(entries)
+
     def stats_export(self) -> dict:
         """One flat snapshot of the serving metrics surface: lifecycle
         counters, queue/breaker state, the TransferBufferPool's
         allocated/reused counters, and (when a FaultInjector is attached)
         the injected-fault counts — consumed by launch.serve's report and
-        SessionPump.stats_export."""
+        SessionPump.stats_export.
+
+        The lifecycle counters, pending depth, and breaker state are read
+        under ONE session-lock hold, so the snapshot cannot tear mid-read
+        under a live pump: it always satisfies
+          submitted + adopted = completed + shed + errors
+                                + pending + inflight + drained.
+        Pool and injector counters are snapshotted under their own locks
+        (they advance independently of the lifecycle counters)."""
         with self.lock:
             out = dict(self.stats)
+            out["name"] = self.name
             out["pending"] = self.pending
             out["degraded_active"] = self.degraded
             out["consec_faults"] = self._consec_faults
-        out["pool_allocated"] = self.pool.allocated
-        out["pool_reused"] = self.pool.reused
+        pool = self.pool.snapshot()
+        out["pool_allocated"] = pool["allocated"]
+        out["pool_reused"] = pool["reused"]
         if self.faults is not None:
-            out["injected"] = dict(self.faults.stats)
+            out["injected"] = self.faults.snapshot()
         return out
 
     def shed_pending(self) -> int:

@@ -227,6 +227,7 @@ def _streams(b, g, t, d, seed=9):
     return xc, w, zq, g_ll, g_ct, g_cn
 
 
+@pytest.mark.slow           # heavy double-compile (autodiff + closed form)
 def test_routed_autodiff_matches_closed_form_bwd():
     """jax.grad through cascade_loss_ref (the production CPU path, routing
     expressed algebraically) must equal the hand-derived backward."""
@@ -264,6 +265,8 @@ def test_penalty_stream_routes_to_zq_pen_only():
     assert float(jnp.abs(dzqp).max()) > 0.0
 
 
+@pytest.mark.slow           # 8-stage underflow construction recompiles both
+#                             graphs; the 3-stage NLL parity stays fast
 def test_ref_nll_survives_pass_prob_underflow():
     """A cascade whose TOTAL log pass-probability is below log(FLT_MIN)
     (~-87 nats, e.g. 8 stages at -12 each) must keep the NLL partial

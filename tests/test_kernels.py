@@ -75,7 +75,8 @@ def _assert_filter_parity(x, w, zq, mask, m_q, tol):
     return got
 
 
-@pytest.mark.parametrize("g", [1, 7, 48,
+@pytest.mark.parametrize("g", [1, 7,
+                               pytest.param(48, marks=pytest.mark.slow),
                                pytest.param(130, marks=pytest.mark.slow),
                                pytest.param(256, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("d,t", [(24, 3), (8, 1), (40, 5)])
@@ -138,7 +139,7 @@ def test_cascade_filter_chain_is_nested():
     (1024, 1000, ops.NO_WINDOW),
     pytest.param(1024, 511, 256, marks=pytest.mark.slow),
     pytest.param(2048, 2047, 1024, marks=pytest.mark.slow),
-    (512, 0, ops.NO_WINDOW),
+    pytest.param(512, 0, ops.NO_WINDOW, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, _BF16])
 def test_swa_decode_sweep(b, h, hkv, hd, s, cache_len, window, dtype):
@@ -153,6 +154,8 @@ def test_swa_decode_sweep(b, h, hkv, hd, s, cache_len, window, dtype):
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
 
 
+@pytest.mark.slow           # cross-checks the engine path the sweep above
+#                             already pins against the kernel reference
 def test_swa_decode_matches_engine_reference():
     """The kernel agrees with the engine's decode_attention path."""
     from repro.models.layers import decode_attention

@@ -9,6 +9,7 @@ representative grid of its domain (bounds, midpoints, interior points).
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -81,6 +82,8 @@ def _cfg_params(n_stages, seed, scale=0.5):
     return cfg, params
 
 
+@pytest.mark.slow           # full 1-6-stage sweep; fast loop keeps the
+#                             3-stage invariants below
 @given(st.integers(1, 6), st.integers(0, 10**6))
 @settings(**_settings)
 def test_pass_prob_monotone_in_stages(n_stages, seed):
@@ -194,6 +197,9 @@ def _filter_case(seed, b, g, t=3, d=24):
 # test then reuses one jitted interpret-mode kernel compilation, keeping
 # the fallback grid inside the fast loop's budget.
 
+@pytest.mark.slow           # two of the four filter edge-case families
+#                             stay fast (ties, m_q < N_q); these two ride
+#                             the slow loop
 @given(st.integers(0, 10**6))
 @settings(max_examples=10, deadline=None)
 def test_filter_decisions_agree_with_fully_masked_rows(seed):
@@ -206,6 +212,7 @@ def test_filter_decisions_agree_with_fully_masked_rows(seed):
     assert np.asarray(fused["survivors"])[0].sum() == 0
 
 
+@pytest.mark.slow
 @given(st.integers(0, 10**6))
 @settings(max_examples=10, deadline=None)
 def test_filter_single_survivor(seed):
@@ -250,6 +257,7 @@ def test_filter_mq_below_valid_count(seed):
     _assert_decisions_agree(fused, unfused, mask)
 
 
+@pytest.mark.slow           # full-loss double-permutation sweep
 @given(st.integers(0, 10**6))
 @settings(max_examples=10, deadline=None)
 def test_query_group_permutation_invariance(seed):
@@ -281,3 +289,110 @@ def test_query_group_permutation_invariance(seed):
     jb3 = {k: (v[permb] if hasattr(v, "shape") and v.shape[:1] == (B,) else v)
            for k, v in jb.items()}
     assert abs(float(L.loss_l3(params, cfg, lcfg, jb3)) - l0) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Multi-replica router invariants, for ANY random arrival/failure schedule:
+# every submitted future resolves exactly once, no request is ever served
+# twice (even across a failover drain), and the global accounting identity
+# closes — per-replica with the drained/adopted legs, fleet-wide without.
+# ---------------------------------------------------------------------------
+
+from repro.serving.batching import RankRequest
+from repro.serving.faults import FaultConfig, FaultInjector
+from repro.serving.loadgen import run_open_loop_router
+from repro.serving.router import ReplicaRouter, RouterConfig
+from repro.serving.session import (CascadeSession, FlushPolicy, RetryPolicy,
+                                   ServingConfig)
+
+# one donor session per module: every case's replicas share its warmed jit
+# cache (pipeline_from), so the sweep compiles each tiny shape exactly once
+_DONOR: list = []
+
+
+def _router_fleet(n, scfg, faults, seed):
+    cfg, params = _cfg_params(3, 0, scale=0.3)
+    if not _DONOR:
+        _DONOR.append(CascadeSession(
+            params, cfg, scfg=ServingConfig(plan="filter",
+                                            group_buckets=(8,))))
+    reps = [CascadeSession(params, cfg, scfg=scfg, faults=faults[k],
+                           name=f"replica{k}", pipeline_from=_DONOR[0])
+            for k in range(n)]
+    for r in reps:
+        r._sleep = lambda s: None
+    return cfg, reps
+
+
+class _TickTimer:
+    def __init__(self, dt_s=0.003):
+        self.t, self.dt = 0.0, dt_s
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=6, deadline=None)
+def test_router_schedules_resolve_once_and_identity_closes(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 4))
+    # random failure schedule: any subset of replicas faults at any rate —
+    # including always-faulting replicas whose breakers trip mid-run
+    rates = rng.choice([0.0, 0.0, 0.3, 1.0], size=n)
+    faults = [FaultInjector(FaultConfig(transient_rate=float(p),
+                                        seed=seed + k)) if p > 0 else None
+              for k, p in enumerate(rates)]
+    scfg = ServingConfig(
+        plan="filter", group_buckets=(8,), batch_groups=2,
+        max_queue=int(rng.integers(4, 24)),
+        flush=FlushPolicy(max_wait_ms=float(rng.uniform(0.5, 8.0))),
+        retry=RetryPolicy(max_attempts=2, backoff_ms=0.01,
+                          breaker_degrade_after=None,
+                          breaker_open_after=4))
+    cfg, reps = _router_fleet(n, scfg, faults, seed)
+    rt = ReplicaRouter(reps, RouterConfig(probe_interval_ms=2.0))
+    # record every resolution fleet-wide: the duplicate-serve guard
+    resolved_ids: list[int] = []
+    for r in reps:
+        def rec(chunk, results, now_ms, done_ms=None, _orig=r.resolve_chunk):
+            out = _orig(chunk, results, now_ms, done_ms)
+            resolved_ids.extend(resp.request_id for resp in out)
+            return out
+        r.resolve_chunk = rec
+    # random arrival schedule: random sizes, rate, deadline discipline
+    n_req = int(rng.integers(10, 40))
+    reqs = [RankRequest(request_id=i,
+                        q_feat=np.eye(cfg.d_q)[i % cfg.d_q]
+                        .astype(np.float32),
+                        item_feats=rng.normal(
+                            size=(int(rng.integers(2, 9)), cfg.d_x))
+                        .astype(np.float32),
+                        m_q=11)
+            for i in range(n_req)]
+    res = run_open_loop_router(
+        rt, reqs, qps=float(rng.uniform(100.0, 3000.0)),
+        deadline_ms=float(rng.uniform(10.0, 100.0))
+        if rng.random() < 0.5 else None,
+        seed=seed, timer=_TickTimer())
+    rt.close()
+    # 1) nothing unresolved, ever — not the caller's futures, not probes
+    assert res.unresolved == 0
+    assert all(f.done() for f in res.futures)
+    # 2) no request resolved twice, anywhere in the fleet (adoption moves
+    # an entry BETWEEN replicas; it must never duplicate one)
+    assert len(resolved_ids) == len(set(resolved_ids))
+    # 3) accounting closes at every level
+    stx = rt.stats_export()
+    glob = stx["global"]
+    assert glob["pending"] == 0 and glob["inflight"] == 0
+    assert glob["submitted"] == (glob["completed"] + glob["shed"]
+                                 + glob["errors"])
+    assert glob["drained"] == glob["adopted"]
+    for s in stx["replicas"]:
+        assert (s["submitted"] + s["adopted"]
+                == s["completed"] + s["shed"] + s["errors"]
+                + s["pending"] + s["inflight"] + s["drained"]), s
+    # 4) the caller's ledger matches the fleet's
+    assert res.completed + res.shed + res.errors == n_req

@@ -215,6 +215,58 @@ def test_transfer_pool_zeroes_reused_buffers():
 
 
 # ---------------------------------------------------------------------------
+# stats_export atomicity: a live reporter hammering snapshots while a pump
+# serves concurrent submitters must NEVER observe a torn read — the
+# counters, pending depth and breaker state are read under one lock hold,
+# so every snapshot satisfies the accounting identity exactly. (Regression:
+# pending used to be read outside the counters' lock hold, so a snapshot
+# taken mid-claim could see an entry as neither pending nor inflight.)
+# ---------------------------------------------------------------------------
+
+def test_stats_export_snapshot_never_tears_under_live_pump():
+    params, cfg = _cascade()
+    ses = _session(params, cfg, buckets=(8,), batch_groups=4, max_queue=32,
+                   flush=FlushPolicy(max_wait_ms=1.0))
+    ses.warmup()
+    torn = []
+    stop = threading.Event()
+
+    def reporter():
+        while not stop.is_set():
+            s = ses.stats_export()
+            lhs = s["submitted"] + s["adopted"]
+            rhs = (s["completed"] + s["shed"] + s["errors"] + s["pending"]
+                   + s["inflight"] + s["drained"])
+            if lhs != rhs:
+                torn.append(s)
+
+    futs = []
+    fut_lock = threading.Lock()
+
+    def submitter(t):
+        for i in range(30):
+            f = pump.submit(_req(t * 1000 + i, 4, cfg, seed=i))
+            with fut_lock:
+                futs.append(f)
+
+    with SessionPump(ses) as pump:
+        rep = threading.Thread(target=reporter)
+        rep.start()
+        subs = [threading.Thread(target=submitter, args=(t,))
+                for t in range(3)]
+        for t in subs:
+            t.start()
+        for t in subs:
+            t.join()
+        for f in futs:
+            f.wait(timeout=30.0)
+        stop.set()
+        rep.join()
+    assert not torn, f"torn stats snapshot(s): {torn[:2]}"
+    assert all(f.done() for f in futs)
+
+
+# ---------------------------------------------------------------------------
 # The wall-clock soak: concurrent submitters against a live pump.
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,293 @@
+"""ReplicaRouter tests: least-loaded placement, GLOBAL admission and
+degradation (judging fleet depth, not one replica's slice), the failover
+regression (a breaker-open replica's backlog drains to survivors — zero
+unresolved futures, zero recompiles, FIFO seniority preserved — while
+failover=False reproduces the pre-fix stranded-backlog failure mode),
+probe re-admission, and the wall-clock pump-mode soak."""
+
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cascade as C
+from repro.data import features as F
+from repro.serving.batching import RankRequest
+from repro.serving.faults import FaultConfig, FaultInjector
+from repro.serving.pump import SessionPump, run_wall_clock
+from repro.serving.router import ReplicaRouter, RouterConfig, make_replicas
+from repro.serving.session import (CascadeSession, DEGRADE_TIGHTEN_MQ,
+                                   DegradePolicy, FlushPolicy, RetryPolicy,
+                                   ServingConfig, STATUS_ERROR, STATUS_OK,
+                                   STATUS_SHED)
+
+
+def _cascade():
+    masks = F.default_stage_masks(3)
+    cfg = C.CascadeConfig(3, F.N_FEATURES, F.N_QUERY_BUCKETS, masks,
+                          F.stage_costs(masks))
+    params = C.init_params(cfg, jax.random.PRNGKey(0), scale=0.3)
+    return params, cfg
+
+
+def _req(i, n_items, cfg, seed=None):
+    rng = np.random.default_rng(n_items if seed is None else seed)
+    return RankRequest(request_id=i,
+                       q_feat=np.eye(cfg.d_q)[i % cfg.d_q].astype(np.float32),
+                       item_feats=rng.normal(size=(n_items, cfg.d_x))
+                       .astype(np.float32),
+                       m_q=10 * n_items + 1)
+
+
+# a breaker that trips fast: one attempt per chunk, two consecutive failed
+# attempts open it, and the degrade stage is off so tests see pure failover
+FAST_BREAKER = RetryPolicy(max_attempts=1, backoff_ms=0.01,
+                           breaker_degrade_after=None, breaker_open_after=2)
+
+
+def _scfg(**kw):
+    defaults = dict(plan="filter", group_buckets=(8,), batch_groups=2,
+                    flush=FlushPolicy(max_wait_ms=60_000.0))
+    defaults.update(kw)
+    return ServingConfig(**defaults)
+
+
+def _identity(s):
+    """The per-replica atomic-snapshot identity, drain/adopt legs included
+    (pump-mode exports nest the session's counters under "session")."""
+    s = s.get("session", s)
+    return (s["submitted"] + s["adopted"]
+            == s["completed"] + s["shed"] + s["errors"]
+            + s["pending"] + s["inflight"] + s["drained"])
+
+
+# ---------------------------------------------------------------------------
+# Placement + global admission: one controller over N executors.
+# ---------------------------------------------------------------------------
+
+def test_least_loaded_placement_spreads_arrivals():
+    params, cfg = _cascade()
+    rt = ReplicaRouter(make_replicas(params, cfg, n=2,
+                                     scfg=_scfg(batch_groups=8)))
+    for i in range(6):
+        rt.submit(_req(i, 4, cfg), now_ms=0.0)
+    # with equal service, least-loaded alternates: 3 queued on each replica
+    assert [r.queue_depth() for r in rt.replicas] == [3, 3]
+    assert rt.stats["routed"] == 6 and rt.global_depth() == 6
+    assert rt.close() == 6          # close sheds everything still queued
+
+
+def test_admission_sheds_on_global_depth_not_local():
+    params, cfg = _cascade()
+    # max_queue=4 is the GLOBAL bound: each replica alone would accept 4
+    rt = ReplicaRouter(make_replicas(params, cfg, n=2,
+                                     scfg=_scfg(batch_groups=8, max_queue=4)))
+    futs = [rt.submit(_req(i, 4, cfg), now_ms=0.0) for i in range(4)]
+    assert not any(f.done() for f in futs)
+    assert [r.queue_depth() for r in rt.replicas] == [2, 2]
+    # every replica is locally under the bound (2 < 4), but the FLEET is at
+    # capacity: the next request sheds at admission
+    fut = rt.submit(_req(9, 4, cfg), now_ms=0.0)
+    assert fut.done() and fut.result().status == STATUS_SHED
+    rt.close()
+
+
+def test_degrade_watermark_judges_global_depth():
+    params, cfg = _cascade()
+    scfg = _scfg(batch_groups=4,
+                 degrade=DegradePolicy(high_watermark=4, low_watermark=0))
+    reps = make_replicas(params, cfg, n=2, scfg=scfg)
+    rt = ReplicaRouter(reps)
+    for i in range(6):
+        rt.submit(_req(i, 4, cfg), now_ms=0.0)
+    assert [r.queue_depth() for r in rt.replicas] == [3, 3]
+    # each replica holds 3 < high_watermark locally, yet flushing serves
+    # degraded: the watermark fired on the GLOBAL depth (6 >= 4)
+    resps = reps[0].flush(10.0)
+    assert all(DEGRADE_TIGHTEN_MQ in r.degraded for r in resps)
+    # control: the same 3-deep queue WITHOUT the router's global hook does
+    # not reach the watermark — the fleet's pressure, not the replica's
+    solo = CascadeSession(params, cfg, scfg=scfg, pipeline_from=reps[0])
+    for i in range(3):
+        solo.submit(_req(i, 4, cfg), now_ms=0.0)
+    assert all(not r.degraded for r in solo.flush(10.0))
+    rt.close()
+
+
+# ---------------------------------------------------------------------------
+# Failover: the regression this PR exists for. A replica whose breaker
+# trips open mid-soak must NOT strand its queued backlog.
+# ---------------------------------------------------------------------------
+
+def _trip_breaker(rep, now_ms=0.0):
+    """Serve one chunk through the always-faulting executor: with
+    max_attempts=1 the chunk bisects to per-request quarantine, racking up
+    consecutive faults past breaker_open_after."""
+    chunk = rep.claim_bucket(rep.buckets[0])
+    assert chunk is not None
+    resps = rep.resolve_chunk(chunk, rep.execute_chunk(chunk), now_ms)
+    assert {r.status for r in resps} == {STATUS_ERROR}
+    assert rep._breaker_open()
+    return resps
+
+
+def _failover_fixture(failover):
+    params, cfg = _cascade()
+    reps = make_replicas(
+        params, cfg, n=2, scfg=_scfg(retry=FAST_BREAKER),
+        faults=[FaultInjector(FaultConfig(transient_rate=1.0, seed=1)),
+                None])
+    for r in reps:
+        r._sleep = lambda s: None
+    rt = ReplicaRouter(reps, RouterConfig(failover=failover,
+                                          probe_interval_ms=5.0))
+    rt.warmup()                      # co-located: one shared jit cache
+    # backlog lands on the DOOMED replica before its breaker trips (ids
+    # 0..7), plus one locally-submitted junior request on the survivor
+    futs = [reps[0].submit(_req(i, 4, cfg), now_ms=0.0) for i in range(8)]
+    local = reps[1].submit(_req(100, 4, cfg), now_ms=0.0)
+    return params, cfg, reps, rt, futs, local
+
+
+def test_failover_drains_backlog_to_survivor():
+    params, cfg, reps, rt, futs, local = _failover_fixture(failover=True)
+    n_compiled = reps[1]._rank._cache_size()
+    _trip_breaker(reps[0])           # ids 0,1 quarantine; breaker opens
+    rt.tick(0.0)
+    # the dead replica's backlog (ids 2..7) moved to the survivor — at the
+    # FRONT, senior to the survivor's own queued request
+    assert reps[0].pending == 0
+    assert reps[1].stats["adopted"] == 6 and reps[0].stats["drained"] == 6
+    assert rt.stats["failovers"] == 1 and rt.stats["drained"] == 6
+    assert rt._failed_snapshot() == {0}
+    resps = reps[1].flush(50.0)
+    assert [r.request_id for r in resps] == [2, 3, 4, 5, 6, 7, 100]
+    assert all(r.status == STATUS_OK for r in resps)
+    assert all(f.done() for f in futs) and local.done()
+    # adopted work re-claimed through the warmed shapes: zero recompiles
+    assert reps[1]._rank._cache_size() == n_compiled
+    # adopted results are bit-identical to the same request served on a
+    # fresh single session (the drain changes placement, never compute)
+    solo = CascadeSession(params, cfg, scfg=_scfg(), pipeline_from=reps[1])
+    f_solo = solo.submit(_req(3, 4, cfg), now_ms=0.0)
+    solo.flush(0.0)
+    np.testing.assert_array_equal(futs[3].result().scores,
+                                  f_solo.result().scores)
+    # per-replica snapshots close with the drained/adopted legs, and the
+    # global identity reduces to the plain one (probe traffic included)
+    st = rt.stats_export()
+    assert all(_identity(s) for s in st["replicas"])
+    g = st["global"]
+    assert g["submitted"] == (g["completed"] + g["shed"] + g["errors"]
+                              + g["pending"] + g["inflight"])
+    rt.close()
+
+
+def test_failover_disabled_reproduces_stranded_backlog():
+    """The pre-fix failure mode, pinned: without the drain, a breaker-open
+    replica's queue is stranded behind a broken executor — the very
+    assertion the fix makes true (survivor absorbs the backlog) fails."""
+    _, _, reps, rt, futs, local = _failover_fixture(failover=False)
+    _trip_breaker(reps[0])
+    rt.tick(0.0)
+    # failed replica detected... but its backlog went nowhere
+    assert rt._failed_snapshot() == {0}
+    assert reps[0].pending == 6          # stranded — the fix asserts == 0
+    assert reps[1].stats["adopted"] == 0
+    # the stranded work can only resolve through the broken executor:
+    # every one of those requests fails instead of being served
+    reps[0].flush(50.0)
+    reps[1].flush(50.0)
+    assert all(f.result().status == STATUS_ERROR for f in futs[2:])
+    assert local.result().status == STATUS_OK    # survivor unaffected
+    rt.close()
+
+
+def test_breaker_probe_readmits_recovered_replica():
+    _, _, reps, rt, futs, local = _failover_fixture(failover=True)
+    _trip_breaker(reps[0])
+    rt.tick(0.0)                     # drain + first probe (still faulting)
+    assert rt._failed_snapshot() == {0}
+    assert rt.stats["probes"] == 1
+    assert reps[0]._breaker_open()   # probe failed: breaker stays open
+    # rate limit: a tick inside probe_interval_ms sends no second probe
+    rt.tick(2.0)
+    assert rt.stats["probes"] == 1
+    # the executor recovers; the next due probe succeeds and resets the
+    # breaker, and the tick after that re-admits the replica
+    reps[0].faults = None
+    rt.tick(10.0)
+    assert rt.stats["probes"] == 2 and not reps[0]._breaker_open()
+    rt.tick(11.0)
+    assert rt._failed_snapshot() == set()
+    assert rt.stats["recoveries"] == 1
+    # re-admitted replica takes new placements again
+    reps[1].flush(20.0)              # clear the survivor's adopted backlog
+    rt.submit(_req(200, 4, reps[0].cfg), now_ms=20.0)
+    assert reps[0].queue_depth() == 1
+    rt.close()
+
+
+def test_all_replicas_failed_still_resolves_everything():
+    """No survivors to drain to: the backlog stays put, but every future
+    still resolves explicitly (errors through the broken executor) and
+    close() sheds the rest — nothing ever hangs."""
+    params, cfg = _cascade()
+    reps = make_replicas(
+        params, cfg, n=2, scfg=_scfg(retry=FAST_BREAKER),
+        faults=[FaultInjector(FaultConfig(transient_rate=1.0, seed=k + 1))
+                for k in range(2)])
+    for r in reps:
+        r._sleep = lambda s: None
+    rt = ReplicaRouter(reps)
+    # 4 queued per replica; tripping each breaker consumes one chunk of 2,
+    # leaving a live backlog on BOTH (breaker-open shed needs pending > 0
+    # — an empty queue admits instead, that's the probe seam)
+    futs = [rt.submit(_req(i, 4, cfg), now_ms=0.0) for i in range(8)]
+    _trip_breaker(reps[0])
+    _trip_breaker(reps[1])
+    rt.tick(0.0)
+    assert rt._failed_snapshot() == {0, 1}
+    assert all(r.pending > 0 for r in reps)      # nowhere to drain to
+    # placement still accepts work (falls back to all-failed pool) and the
+    # sessions' own breaker-open admission sheds it
+    fut = rt.submit(_req(9, 4, cfg), now_ms=0.0)
+    assert fut.done() and fut.result().status == STATUS_SHED
+    rt.close()
+    assert all(f.done() for f in futs)
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock pump mode: the same router over live per-replica pumps.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_router_pump_soak_two_replicas_zero_unresolved_zero_recompiles():
+    params, cfg = _cascade()
+    scfg = _scfg(group_buckets=(8, 16), batch_groups=4, max_queue=64,
+                 flush=FlushPolicy(max_wait_ms=2.0))
+    reps = make_replicas(params, cfg, n=2, scfg=scfg)
+    rt = ReplicaRouter(reps)
+    rt.warmup()
+    n_compiled = reps[0]._rank._cache_size()
+    rng = np.random.default_rng(11)
+    reqs = [_req(i, int(rng.integers(2, 17)), cfg, seed=i)
+            for i in range(80)]
+    rt.attach_pumps([SessionPump(s, name=f"pump-{s.name}").start()
+                     for s in reps])
+    res = run_wall_clock(rt, reqs, qps=2000.0, deadline_ms=250.0,
+                         n_threads=4, seed=11)
+    rt.close()
+    assert res.unresolved == 0
+    assert all(f.done() for f in res.futures)
+    assert res.completed + res.shed == len(reqs)
+    st = rt.stats_export()
+    assert all(_identity(s) for s in st["replicas"])
+    g = st["global"]
+    assert g["pending"] == 0 and g["inflight"] == 0
+    assert g["submitted"] == g["completed"] + g["shed"] + g["errors"]
+    assert rt.stats["routed"] == len(reqs)
+    # both replicas took traffic, sharing ONE warmed cache: no recompiles
+    assert reps[0]._rank._cache_size() == n_compiled
+    assert sum(s["session"]["submitted"] > 0 for s in st["replicas"]) == 2

@@ -250,6 +250,7 @@ def test_custom_vjp_grads_match_ref_autodiff_interpret():
                                    rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow           # interpret-mode vmap compile is the cost here
 def test_custom_vjp_supports_vmap_interpret():
     """The losses vmap the scorer over query groups — the custom VJP must
     batch on both passes."""
@@ -336,6 +337,7 @@ def test_epoch_steps_reports_dropped_tail():
     assert all(b["x"].shape[0] == 32 for b in got)
 
 
+@pytest.mark.slow           # four extra evaluation compiles
 def test_evaluate_single_forward_matches_four_pass(tiny_log, train_cfg):
     """evaluate() derives all metrics from one forward; the four-pass
     derivation (scores / cost / latency / counts each re-scoring) must

@@ -88,6 +88,49 @@ timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.serve \
 test -s BENCH_router.json || { echo "BENCH_router.json missing"; exit 1; }
 phase_done "router chaos smoke"
 
+echo "== train restart smoke: kill at epoch 2, --resume, bit-identical =="
+# the crash seam hard-exits with code 9 (os._exit: a SIGKILL stand-in —
+# no atexit, no flush) after epoch 2's checkpoint commits; the resumed
+# run must reproduce the uninterrupted run's params sha256 EXACTLY
+rm -rf CKPT_ci
+TRAIN_ARGS="--target cloes --queries 300 --epochs 4 --batch-groups 16"
+REF_DIGEST=$(timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.train \
+    $TRAIN_ARGS | grep -o 'sha256=[0-9a-f]*')
+set +e
+timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.train $TRAIN_ARGS \
+    --checkpoint-dir CKPT_ci --crash-after-epoch 2 >/dev/null 2>&1
+crash_rc=$?
+set -e
+if [[ $crash_rc -ne 9 ]]; then
+    echo "FAIL: crash seam should exit 9 (CRASH_EXIT_CODE), got $crash_rc" >&2
+    exit 1
+fi
+RES_DIGEST=$(timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.train \
+    $TRAIN_ARGS --checkpoint-dir CKPT_ci --resume | grep -o 'sha256=[0-9a-f]*')
+if [[ -z "$REF_DIGEST" || "$REF_DIGEST" != "$RES_DIGEST" ]]; then
+    echo "FAIL: resumed trajectory diverged — $RES_DIGEST != $REF_DIGEST" >&2
+    exit 1
+fi
+echo "   kill-and-resume reproduced $REF_DIGEST"
+phase_done "train restart smoke"
+
+echo "== warm-restart smoke: graceful stop -> --warm-restart, 0 recompiles =="
+# first run trains, serves, drains and persists params + warmup manifest;
+# the second restores and replays the manifest — launch.serve exits
+# nonzero itself if the warm-restarted serve phase compiled ANY new
+# pipeline shape or the lifecycle accounting fails to close
+rm -rf SERVE_ci
+rm -f BENCH_restart.json
+timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.serve \
+    --requests 60 --qps 400 --serve-dir SERVE_ci
+test -s SERVE_ci/warmup_manifest.json || {
+    echo "SERVE_ci/warmup_manifest.json missing"; exit 1; }
+timeout "${BENCH_TIMEOUT:-300}" python -m repro.launch.serve \
+    --requests 60 --qps 400 --serve-dir SERVE_ci --warm-restart \
+    --report BENCH_restart.json
+test -s BENCH_restart.json || { echo "BENCH_restart.json missing"; exit 1; }
+phase_done "warm-restart smoke"
+
 echo "== serving coverage gate: src/repro/serving floor =="
 # floor grounded at measured-minus-2% (stdlib-trace measurement: 76.5% on
 # the fast serving selection). pytest-cov, when installed (CI), measures
@@ -103,7 +146,8 @@ if python -c "import pytest_cov" 2>/dev/null; then
         --cov-fail-under="${COV_FLOOR:-72}" \
         tests/test_serving_batching.py tests/test_session.py \
         tests/test_faults.py tests/test_pump.py tests/test_router.py \
-        tests/test_determinism.py tests/test_arch_smoke.py
+        tests/test_determinism.py tests/test_arch_smoke.py \
+        tests/test_checkpoint.py
 else
     COV_FLOOR="${COV_FLOOR:-74}" timeout "${COV_TIMEOUT:-600}" \
         python scripts/measure_serving_cov.py

@@ -1,5 +1,13 @@
-"""Minimal pytree checkpointing (msgpack + npz; no orbax in this env)."""
+"""Crash-safe pytree checkpointing (atomic npz + checksummed manifest;
+no orbax in this env — see io.py for the commit protocol)."""
 
-from repro.checkpoint.io import save_pytree, load_pytree
+from repro.checkpoint.io import (
+    CheckpointCorrupt,
+    CheckpointError,
+    CheckpointStore,
+    load_pytree,
+    save_pytree,
+)
 
-__all__ = ["save_pytree", "load_pytree"]
+__all__ = ["save_pytree", "load_pytree", "CheckpointStore",
+           "CheckpointError", "CheckpointCorrupt"]

@@ -1,60 +1,332 @@
-"""Pytree checkpointing: arrays to .npz + structure to msgpack sidecar.
+"""Crash-safe pytree checkpointing: durable state for trainer and server.
 
-Works for any nested dict/list/tuple of jax/numpy arrays and scalars. Arrays
-are gathered to host (fine at the sizes we train here; a sharded
-orbax-style writer is the production path on real pods)."""
+The operational cascade runs as a long-lived service — process death,
+preemption and deploys are routine — so checkpoint writes must be crash-
+safe and checkpoint reads must be suspicious. This module is the one
+durable-state layer for both halves of the system (training resume in
+core.trainer.fit, serving warm restart in launch.serve):
+
+  * `save_pytree(path, tree)` writes TWO files, `<path>.npz` (the arrays)
+    and `<path>.json` (the manifest), each atomically: temp file in the
+    same directory, flush + fsync, `os.replace`, then an fsync of the
+    directory so the rename itself is durable. The manifest is written
+    LAST — it is the commit point. A crash at any instant leaves either
+    the previous checkpoint intact or an uncommitted temp/arrays file
+    that loading ignores; it can never leave a half-visible checkpoint
+    that parses.
+  * the manifest is versioned (`FORMAT_VERSION`) and carries a structure
+    spec plus per-array {dtype, shape, crc32}; `load_pytree` verifies
+    every checksum and the arrays-file length before decoding, so torn
+    writes, truncation and bit rot surface as `CheckpointCorrupt`, never
+    as silently wrong parameters.
+  * the round trip is EXACT: dicts/lists/tuples come back as the same
+    container types (the old flat-namespace format collapsed lists into
+    dicts keyed by string integers), Python scalars (int/float/bool/str/
+    None) come back as Python scalars (not 0-d arrays), and non-native
+    dtypes (bfloat16 and friends — np.savez silently degrades them to
+    raw void bytes) are stored as their bit patterns with the dtype name
+    in the manifest and restored exactly. Numpy scalars come back as 0-d
+    arrays of the same dtype (the one documented normalization).
+  * `CheckpointStore` adds numbered steps on top: `save(step, tree,
+    meta=)` commits `step_<n>`, retention GC keeps the newest `keep`
+    committed steps, and `load_latest()` walks steps newest-first,
+    skipping torn/corrupt ones (recorded in `store.errors`) until a
+    checkpoint verifies — the last-good fallback the restart path relies
+    on. An optional `FsFaultInjector` (serving.faults) wraps every file
+    write/read so that discipline is chaos-tested with the same seeded
+    injectors as the executor faults.
+
+Arrays are gathered to host (fine at the sizes we train here; a sharded
+orbax-style writer is the production path on real pods).
+"""
 
 from __future__ import annotations
 
+import io
 import json
+import os
+import zlib
 from pathlib import Path
 
 import jax
 import numpy as np
 
+FORMAT = "repro-checkpoint"
+FORMAT_VERSION = 1
 
-def _flatten(tree, prefix="", out=None):
-    out = out if out is not None else {}
-    if isinstance(tree, dict):
-        for k in sorted(tree):
-            _flatten(tree[k], f"{prefix}{k}/", out)
-    elif isinstance(tree, (list, tuple)):
-        for i, v in enumerate(tree):
-            _flatten(v, f"{prefix}{i}/", out)
-    else:
-        out[prefix.rstrip("/")] = tree
-    return out
+_ARRAYS_SUFFIX = ".npz"
+_MANIFEST_SUFFIX = ".json"
+# bit-pattern storage for dtypes npz cannot hold natively (bfloat16, fp8)
+_BITS_OF = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
 
 
-def save_pytree(path: str | Path, tree) -> None:
-    path = Path(path)
-    path.parent.mkdir(parents=True, exist_ok=True)
-    flat = _flatten(jax.device_get(tree))
-    arrays = {k: np.asarray(v) for k, v in flat.items()
-              if hasattr(v, "shape") or isinstance(v, (int, float))}
-    meta = {k: v for k, v in flat.items()
-            if not (hasattr(v, "shape") or isinstance(v, (int, float)))}
-    np.savez(path.with_suffix(".npz"), **{k: np.asarray(v)
-                                          for k, v in arrays.items()})
-    path.with_suffix(".meta.json").write_text(json.dumps(meta, default=str))
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint load failures."""
 
 
-def load_pytree(path: str | Path) -> dict:
-    path = Path(path)
-    data = np.load(path.with_suffix(".npz"))
-    out: dict = {}
-    for key in data.files:
-        parts = key.split("/")
-        node = out
-        for p in parts[:-1]:
-            node = node.setdefault(p, {})
-        node[parts[-1]] = data[key]
-    meta_path = path.with_suffix(".meta.json")
-    if meta_path.exists():
-        for k, v in json.loads(meta_path.read_text()).items():
-            parts = k.split("/")
-            node = out
-            for p in parts[:-1]:
-                node = node.setdefault(p, {})
-            node[parts[-1]] = v
-    return out
+class CheckpointCorrupt(CheckpointError):
+    """The checkpoint on disk is torn, truncated, or bit-rotted: a
+    checksum/length/parse check failed. load_latest() treats this as
+    'skip and fall back to the previous step'."""
+
+
+# ---------------------------------------------------------------------------
+# Structure spec: a JSON-serializable exact encoding of the pytree. Tags:
+#   {"d": [[key, spec], ...]}  dict (string keys, insertion order kept)
+#   {"l": [spec, ...]}         list
+#   {"t": [spec, ...]}         tuple
+#   {"a": idx}                 array leaf -> arrays entry `a<idx>`
+#   {"=": value}               Python scalar leaf (int/float/bool/str/None)
+# ---------------------------------------------------------------------------
+
+def _encode(node, arrays: dict, meta: list):
+    if isinstance(node, dict):
+        pairs = []
+        for k, v in node.items():
+            if not isinstance(k, str):
+                raise TypeError(
+                    f"checkpoint dict keys must be strings, got {k!r} "
+                    f"({type(k).__name__})")
+            pairs.append([k, _encode(v, arrays, meta)])
+        return {"d": pairs}
+    if isinstance(node, (list, tuple)):
+        kids = [_encode(v, arrays, meta) for v in node]
+        return {"l": kids} if isinstance(node, list) else {"t": kids}
+    if isinstance(node, (np.ndarray, np.generic, jax.Array)):
+        # np.asarray(order="C") forces contiguity without the 0-d -> (1,)
+        # promotion np.ascontiguousarray does
+        a = np.asarray(jax.device_get(node), order="C")
+        xdtype = None
+        if a.dtype.isbuiltin != 1:
+            # non-native dtype (bfloat16 etc.): np.savez would silently
+            # degrade it to raw void bytes — store the bit pattern and
+            # remember the real dtype name for the load-side view
+            xdtype = a.dtype.name
+            a = a.view(_BITS_OF[a.dtype.itemsize])
+        idx = len(meta)
+        arrays[f"a{idx}"] = a
+        meta.append({"dtype": a.dtype.str, "xdtype": xdtype,
+                     "shape": list(a.shape),
+                     "crc32": zlib.crc32(a.tobytes())})
+        return {"a": idx}
+    if node is None or isinstance(node, (bool, int, float, str)):
+        return {"=": node}
+    raise TypeError(f"unsupported checkpoint leaf: {type(node).__name__}")
+
+
+def _decode(spec, data, meta):
+    if "d" in spec:
+        return {k: _decode(s, data, meta) for k, s in spec["d"]}
+    if "l" in spec:
+        return [_decode(s, data, meta) for s in spec["l"]]
+    if "t" in spec:
+        return tuple(_decode(s, data, meta) for s in spec["t"])
+    if "a" in spec:
+        idx = spec["a"]
+        m = meta[idx]
+        key = f"a{idx}"
+        if key not in data:
+            raise CheckpointCorrupt(f"arrays file is missing {key}")
+        a = data[key]
+        if a.dtype.str != m["dtype"] or list(a.shape) != m["shape"]:
+            raise CheckpointCorrupt(
+                f"array {key} does not match its manifest: "
+                f"{a.dtype.str}{a.shape} != {m['dtype']}{tuple(m['shape'])}")
+        if zlib.crc32(a.tobytes()) != m["crc32"]:
+            raise CheckpointCorrupt(
+                f"array {key} failed its checksum (torn write or bit rot)")
+        if m["xdtype"] is not None:
+            a = a.view(np.dtype(m["xdtype"]))
+        return a
+    return spec["="]
+
+
+# ---------------------------------------------------------------------------
+# Atomic file IO. fs_faults (serving.faults.FsFaultInjector) wraps the raw
+# bytes on the way to/from disk so the fallback path is chaos-testable.
+# ---------------------------------------------------------------------------
+
+def _atomic_write(path: Path, payload: bytes, fs_faults=None) -> None:
+    """temp file + flush + fsync + rename + directory fsync: after this
+    returns (or after a crash at any point inside it) the path holds
+    either the complete new payload or whatever it held before — never a
+    prefix. An injected torn write (fs_faults) deliberately commits a
+    prefix, modeling a filesystem that lied about durability; the
+    checksum layer must catch it on read."""
+    if fs_faults is not None:
+        payload = fs_faults.on_write(str(path), payload)
+    tmp = path.with_name(path.name + f".tmp.{os.getpid()}")
+    with open(tmp, "wb") as f:
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    dirfd = os.open(path.parent, os.O_RDONLY)
+    try:
+        os.fsync(dirfd)
+    finally:
+        os.close(dirfd)
+
+
+def _read_bytes(path: Path, fs_faults=None) -> bytes:
+    payload = path.read_bytes()
+    if fs_faults is not None:
+        payload = fs_faults.on_read(str(path), payload)
+    return payload
+
+
+def save_pytree(path: str | Path, tree, *, meta: dict | None = None,
+                fs_faults=None) -> Path:
+    """Write `tree` crash-safely as `<path>.npz` + `<path>.json`.
+
+    Arrays first, manifest last: the manifest is the commit point, so a
+    crash mid-save leaves the checkpoint uncommitted (manifest absent or
+    stale) rather than half-written. `meta` is an optional JSON-
+    serializable dict stored in the manifest (retrieved by
+    `CheckpointStore.load` / `load_latest`)."""
+    base = Path(path)
+    base.parent.mkdir(parents=True, exist_ok=True)
+    arrays: dict[str, np.ndarray] = {}
+    ameta: list[dict] = []
+    spec = _encode(tree, arrays, ameta)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    npz_bytes = buf.getvalue()
+    manifest = {
+        "format": FORMAT, "version": FORMAT_VERSION,
+        "spec": spec, "arrays": ameta, "npz_bytes": len(npz_bytes),
+        "meta": meta,
+    }
+    _atomic_write(base.with_name(base.name + _ARRAYS_SUFFIX), npz_bytes,
+                  fs_faults)
+    _atomic_write(base.with_name(base.name + _MANIFEST_SUFFIX),
+                  json.dumps(manifest).encode(), fs_faults)
+    return base
+
+
+def _load(base: Path, fs_faults=None) -> tuple[object, dict | None]:
+    """Verify and decode one checkpoint. FileNotFoundError when it was
+    never committed (no manifest); CheckpointCorrupt when any integrity
+    check fails; CheckpointError for a format/version we cannot read."""
+    man_path = base.with_name(base.name + _MANIFEST_SUFFIX)
+    raw = _read_bytes(man_path, fs_faults)      # FileNotFoundError -> caller
+    try:
+        man = json.loads(raw.decode())
+    except Exception as e:
+        raise CheckpointCorrupt(f"manifest {man_path.name} unreadable: {e}")
+    if not isinstance(man, dict) or man.get("format") != FORMAT:
+        raise CheckpointCorrupt(
+            f"{man_path.name} is not a {FORMAT} manifest")
+    if man.get("version", 0) > FORMAT_VERSION:
+        raise CheckpointError(
+            f"checkpoint version {man['version']} is newer than this "
+            f"reader (supports <= {FORMAT_VERSION})")
+    npz_path = base.with_name(base.name + _ARRAYS_SUFFIX)
+    try:
+        npz_raw = _read_bytes(npz_path, fs_faults)
+    except FileNotFoundError:
+        raise CheckpointCorrupt(
+            f"manifest present but arrays file {npz_path.name} missing "
+            "(torn checkpoint)")
+    if len(npz_raw) != man["npz_bytes"]:
+        raise CheckpointCorrupt(
+            f"arrays file {npz_path.name} is {len(npz_raw)} bytes, "
+            f"manifest committed {man['npz_bytes']} (truncated)")
+    try:
+        with np.load(io.BytesIO(npz_raw), allow_pickle=False) as data:
+            arrays = {k: data[k] for k in data.files}
+    except Exception as e:
+        raise CheckpointCorrupt(f"arrays file {npz_path.name} unreadable: {e}")
+    tree = _decode(man["spec"], arrays, man["arrays"])
+    return tree, man.get("meta")
+
+
+def load_pytree(path: str | Path, *, fs_faults=None):
+    """Load and VERIFY a checkpoint written by save_pytree. Raises
+    FileNotFoundError if it was never committed and CheckpointCorrupt if
+    any checksum/length/parse check fails — corrupt state is never
+    silently returned."""
+    tree, _ = _load(Path(path), fs_faults)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Numbered checkpoint steps with retention and last-good fallback.
+# ---------------------------------------------------------------------------
+
+class CheckpointStore:
+    """Crash-safe numbered checkpoints in one directory.
+
+    `save(step, tree, meta=)` commits `step_<n>` atomically then GCs down
+    to the newest `keep` committed steps. `load_latest()` walks committed
+    steps newest-first and returns the first one that passes verification
+    — a torn or bit-rotted newest checkpoint falls back to the previous
+    good one (each skip is recorded in `self.errors`). Single writer
+    assumed (the trainer / the serving launcher); readers are safe any
+    time because commits are atomic."""
+
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 fs_faults=None):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
+        self.dir = Path(directory)
+        self.keep = keep
+        self.fs_faults = fs_faults
+        self.errors: list[tuple[int, str]] = []   # (step, why skipped)
+        self.dir.mkdir(parents=True, exist_ok=True)
+
+    def _base(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}"
+
+    def steps(self) -> list[int]:
+        """Committed step numbers (manifest present), ascending. Temp
+        files and orphaned arrays files are not steps."""
+        out = []
+        for p in self.dir.glob(f"step_*{_MANIFEST_SUFFIX}"):
+            stem = p.name[:-len(_MANIFEST_SUFFIX)]
+            try:
+                out.append(int(stem.split("_", 1)[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree, *, meta: dict | None = None) -> Path:
+        base = save_pytree(self._base(step), tree, meta=meta,
+                           fs_faults=self.fs_faults)
+        self.gc()
+        return base
+
+    def load(self, step: int) -> tuple[object, dict | None]:
+        return _load(self._base(step), self.fs_faults)
+
+    def load_latest(self) -> tuple[int, object, dict | None] | None:
+        """Newest verifiable checkpoint as (step, tree, meta), falling
+        back past torn/corrupt steps; None when nothing loads."""
+        for step in reversed(self.steps()):
+            try:
+                tree, meta = self.load(step)
+                return step, tree, meta
+            except (CheckpointError, FileNotFoundError, OSError) as e:
+                self.errors.append((step, f"{type(e).__name__}: {e}"))
+        return None
+
+    def gc(self) -> list[int]:
+        """Delete all but the newest `keep` committed steps (manifest
+        first so a crash mid-GC leaves an ignorable orphan, not a
+        manifest pointing at deleted arrays) plus any stale temp files.
+        Returns the steps removed."""
+        steps = self.steps()
+        dead = steps[:-self.keep] if len(steps) > self.keep else []
+        for step in dead:
+            base = self._base(step)
+            base.with_name(base.name + _MANIFEST_SUFFIX).unlink(
+                missing_ok=True)
+            base.with_name(base.name + _ARRAYS_SUFFIX).unlink(
+                missing_ok=True)
+        for tmp in self.dir.glob("*.tmp.*"):
+            tmp.unlink(missing_ok=True)
+        return dead

@@ -122,14 +122,16 @@ def fit_soft_cascade(log: SearchLog, n_stages: int = 3,
 
 
 def fit_cloes(log: SearchLog, n_stages: int = 3, lcfg: L.LossConfig | None = None,
-              tcfg: TrainConfig | None = None, mesh=None):
+              tcfg: TrainConfig | None = None, mesh=None, **fit_kwargs):
     """The proposed model: full L3 objective. mesh (optional) enables the
-    trainer's shard_map data-parallel path (see core.trainer.fit)."""
+    trainer's shard_map data-parallel path; extra keyword args (e.g.
+    checkpoint_dir/resume/crash_after_epoch/train_info) pass straight
+    through to core.trainer.fit."""
     masks = F.default_stage_masks(n_stages)
     cfg = C.CascadeConfig(n_stages=n_stages, d_x=F.N_FEATURES,
                           d_q=F.N_QUERY_BUCKETS, masks=masks,
                           stage_times=F.stage_costs(masks))
     lcfg = lcfg or L.LossConfig()
     tcfg = tcfg or TrainConfig(loss="l3", epochs=8)
-    params = fit(log, cfg, lcfg, tcfg, mesh=mesh)
+    params = fit(log, cfg, lcfg, tcfg, mesh=mesh, **fit_kwargs)
     return params, cfg

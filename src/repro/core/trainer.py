@@ -27,6 +27,7 @@ Two engines behind the same `fit()` API:
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 from typing import Callable, Iterator
 
@@ -37,11 +38,18 @@ from jax.experimental.shard_map import shard_map
 from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh, PartitionSpec as PS
 
+from repro.checkpoint import CheckpointStore
 from repro.core import cascade as C
 from repro.core import losses as L
 from repro.data.synthetic import SearchLog
 from repro.kernels.cascade_loss.kernel import pack_items
 from repro.optim.sgd import apply_updates, momentum_sgd
+
+# Exit code of the deterministic crash seam (fit(crash_after_epoch=k)):
+# os._exit at this code models SIGKILL — no finally blocks, no atexit, no
+# flush — so the restart smoke exercises exactly what a preemption leaves
+# behind. 9 on purpose (the SIGKILL signal number).
+CRASH_EXIT_CODE = 9
 
 
 @dataclasses.dataclass
@@ -70,6 +78,13 @@ class TrainConfig:
     # hot queries, whose tiny per-item cost gradients underflow first when
     # cotangents ever ride a 16-bit backward.
     loss_scale: float = 1.0
+    # Snapshot (params + momentum + epoch + rng key) to fit()'s
+    # checkpoint_dir every this-many epochs (scan engine only; 0 with a
+    # checkpoint_dir means every epoch). The final epoch is always
+    # snapshotted. Because an epoch is a pure function of the restored
+    # carry — minibatch order is re-derived from seed+epoch — a resumed
+    # run is bit-identical to the uninterrupted one.
+    checkpoint_every: int = 0
 
 
 def epoch_steps(n_groups: int, batch_groups: int) -> tuple[int, int]:
@@ -273,17 +288,48 @@ def _make_epoch_fn(cfg: C.CascadeConfig, lcfg: L.LossConfig, loss_fn,
     return jax.jit(sharded, donate_argnums=(0, 1))
 
 
+def _train_sig(tcfg: TrainConfig, cfg: C.CascadeConfig, n_groups: int) -> dict:
+    """The run identity a checkpoint is only valid under. Saved in every
+    checkpoint's meta and strict-equality-checked on resume: resuming a
+    trajectory under a different objective/optimizer/data-order config
+    would silently produce a hybrid run, so it is rejected instead."""
+    return {
+        "loss": tcfg.loss if isinstance(tcfg.loss, str) else "<custom>",
+        "lr": tcfg.lr, "momentum": tcfg.momentum,
+        "batch_groups": tcfg.batch_groups, "seed": tcfg.seed,
+        "precision": tcfg.precision, "loss_scale": tcfg.loss_scale,
+        "n_groups": n_groups, "d_x": cfg.d_x, "d_q": cfg.d_q,
+        "n_stages": cfg.n_stages,
+    }
+
+
 def fit(log: SearchLog, cfg: C.CascadeConfig, lcfg: L.LossConfig,
         tcfg: TrainConfig | None = None,
         callback: Callable[[int, float], None] | None = None,
         *, loss_fn: Callable | None = None,
-        mesh: Mesh | None = None) -> C.Params:
+        mesh: Mesh | None = None,
+        checkpoint_dir: str | None = None, resume: bool = False,
+        keep_checkpoints: int = 3, crash_after_epoch: int | None = None,
+        train_info: dict | None = None) -> C.Params:
     """Train CLOES params on the log. See module docstring for the engines.
 
     loss_fn overrides the objective looked up from tcfg.loss (used by the
     training benchmark to pin a reference implementation). mesh enables
     the shard_map data-parallel path (scan engine only): tcfg.batch_groups
     must divide by the mesh's data-axis size.
+
+    checkpoint_dir (scan engine only) makes training crash-safe: every
+    tcfg.checkpoint_every-th epoch (and the last) the raveled params,
+    momentum state, completed-epoch count and rng key are committed to a
+    CheckpointStore. resume=True restores the latest good checkpoint
+    (falling back past torn ones) and continues — bit-identically,
+    because an epoch is a pure function of (theta, opt_state, epoch): the
+    minibatch order is re-derived from seed+epoch, not from mutable rng
+    state. A checkpoint written under a different TrainConfig identity is
+    rejected (see _train_sig). crash_after_epoch hard-exits the process
+    (os._exit(CRASH_EXIT_CODE), a SIGKILL stand-in) after that many
+    epochs — the deterministic crash seam the CI restart smoke uses.
+    train_info, when given, receives {"restored_epoch", "epochs_run"}.
 
     Data-parallel semantics (the standard approximation): each shard
     normalizes its loss over ITS slice of the minibatch (mask.sum(),
@@ -301,6 +347,10 @@ def fit(log: SearchLog, cfg: C.CascadeConfig, lcfg: L.LossConfig,
 
     if tcfg.engine == "loop":
         assert mesh is None, "the loop engine has no data-parallel path"
+        if checkpoint_dir is not None:
+            raise ValueError(
+                "checkpointing is a scan-engine feature (the loop engine "
+                "is the no-moving-parts baseline/oracle)")
         if tcfg.precision != "f32" or tcfg.loss_scale != 1.0:
             raise ValueError(
                 "precision/loss_scale are scan-engine features (the loop "
@@ -332,7 +382,32 @@ def fit(log: SearchLog, cfg: C.CascadeConfig, lcfg: L.LossConfig,
     opt_state = opt.init(theta)                     # momentum on the ravel
     epoch_fn = _make_epoch_fn(cfg, lcfg, loss_fn, opt.update, mesh, unravel,
                               tcfg.loss_scale)
-    for epoch in range(tcfg.epochs):
+
+    store = None
+    start_epoch = 0
+    if checkpoint_dir is not None:
+        sig = _train_sig(tcfg, cfg, B)
+        ckpt_every = max(1, tcfg.checkpoint_every)
+        store = CheckpointStore(checkpoint_dir, keep=keep_checkpoints)
+        if resume:
+            latest = store.load_latest()    # skips torn/corrupt steps
+            if latest is not None:
+                _, state, meta = latest
+                saved_sig = (meta or {}).get("train_sig")
+                if saved_sig != sig:
+                    raise ValueError(
+                        "checkpoint was written under a different training "
+                        f"config: saved {saved_sig} != current {sig}")
+                # exact restore: theta and momentum bytes are crc-verified,
+                # so the resumed carry IS the killed run's carry
+                theta = jnp.asarray(state["theta"])
+                opt_state = jax.tree.map(jnp.asarray, state["opt_state"])
+                start_epoch = int(state["epoch"])
+    if train_info is not None:
+        train_info["restored_epoch"] = start_epoch
+        train_info["epochs_run"] = max(0, tcfg.epochs - start_epoch)
+
+    for epoch in range(start_epoch, tcfg.epochs):
         idx = jnp.asarray(
             _epoch_perm(B, tcfg.batch_groups, tcfg.seed + epoch))
         theta, opt_state, losses = epoch_fn(theta, opt_state, item, group,
@@ -342,6 +417,17 @@ def fit(log: SearchLog, cfg: C.CascadeConfig, lcfg: L.LossConfig,
             for i in range(steps_per_epoch):
                 if (base + i) % tcfg.log_every == 0:
                     callback(base + i, float(losses[i]))
+        done = epoch + 1
+        if store is not None and (done % ckpt_every == 0
+                                  or done == tcfg.epochs):
+            # theta/opt_state here are the epoch's RETURNED values — the
+            # host fetch in save copies them before the next epoch_fn call
+            # donates their buffers
+            store.save(done, {"theta": theta, "opt_state": opt_state,
+                              "epoch": done, "rng_key": key},
+                       meta={"train_sig": sig})
+        if crash_after_epoch is not None and done >= crash_after_epoch:
+            os._exit(CRASH_EXIT_CODE)
     return unravel(theta)
 
 

@@ -29,13 +29,16 @@ import argparse
 import dataclasses
 import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as CFG
+from repro.checkpoint import load_pytree, save_pytree
 from repro.core import baselines as B
+from repro.core import cascade as C
 from repro.core import losses as L
 from repro.core import trainer as T
 from repro.data import LogConfig, generate_log
@@ -102,6 +105,46 @@ def build_router(params, cfg, lcfg=None, *, n, neural=None, plan="filter",
         RouterConfig())
 
 
+def compiled_count(sessions) -> int:
+    """Total jit-cache entries across the fleet's distinct pipelines
+    (co-located replicas share compilations — count each function once).
+    The delta of this across the serve phase is the recompile count the
+    warm-restart contract pins to zero."""
+    fns = {}
+    for s in sessions:
+        fns[id(s._rank)] = s._rank
+        fns[id(s._rank_noneural)] = s._rank_noneural
+    return sum(f._cache_size() for f in fns.values())
+
+
+def save_serving_state(serve_dir: str, ses: CascadeSession) -> None:
+    """The graceful-shutdown write: everything a restarted server needs to
+    serve its first request with zero recompiles — params, the configs
+    that rebuild the session, and the warmup manifest (also mirrored as
+    plain JSON for humans/CI artifacts). Crash-safe via save_pytree."""
+    manifest = ses.warmup_manifest()
+    cfg = ses.cfg
+    save_pytree(Path(serve_dir) / "serve_state", {
+        "params": jax.device_get(ses.params),
+        "cfg": {"n_stages": cfg.n_stages, "d_x": cfg.d_x, "d_q": cfg.d_q,
+                "masks": cfg.masks, "stage_times": cfg.stage_times},
+        "lcfg": dataclasses.asdict(ses.lcfg),
+        "manifest": manifest,
+    })
+    with open(Path(serve_dir) / "warmup_manifest.json", "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_serving_state(serve_dir: str):
+    """Restore what save_serving_state wrote (verified: a torn/corrupt
+    state raises instead of warm-starting a wrong server).
+    Returns (params, CascadeConfig, LossConfig, warmup manifest)."""
+    state = load_pytree(Path(serve_dir) / "serve_state")
+    cfg = C.CascadeConfig(**state["cfg"])
+    lcfg = L.LossConfig(**state["lcfg"])
+    return state["params"], cfg, lcfg, state["manifest"]
+
+
 def build_injector(rate: float, seed: int) -> FaultInjector | None:
     """Chaos profile for --faults RATE: transients at the full rate,
     latency spikes and score corruption at half, poison at a quarter —
@@ -149,15 +192,42 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--report", default="",
                     help="write the latency/lifecycle report as JSON here")
+    ap.add_argument("--serve-dir", default="",
+                    help="durable serving state: graceful shutdown drains "
+                         "the pumps then writes params + warmup manifest "
+                         "here (crash-safe)")
+    ap.add_argument("--warm-restart", action="store_true",
+                    help="restore params from --serve-dir and replay its "
+                         "warmup manifest instead of training — the first "
+                         "live request must hit zero recompiles (enforced)")
     args = ap.parse_args()
+
+    serve_dir = args.serve_dir or None
+    if args.warm_restart and not serve_dir:
+        raise SystemExit("[serve] --warm-restart requires --serve-dir")
+    if serve_dir and args.neural:
+        raise SystemExit("[serve] --serve-dir persists the cascade params "
+                         "only — the neural stage's weights are not "
+                         "durable state; drop --neural")
 
     log = generate_log(LogConfig(n_queries=800, seed=args.seed))
     tr, te = log.split(0.8)
-    print("[serve] training cascade...")
-    t0 = time.time()
-    params, cfg = B.fit_cloes(tr, lcfg=L.LossConfig(beta=args.beta),
-                              tcfg=T.TrainConfig(loss="l3", epochs=4, lr=0.01))
-    train_s = time.time() - t0
+    lcfg = None             # session default unless a restore overrides it
+    if args.warm_restart:
+        t0 = time.time()
+        params, cfg, lcfg, manifest = load_serving_state(serve_dir)
+        train_s = time.time() - t0
+        print(f"[serve] warm restart from {serve_dir}: restored params + "
+              f"manifest ({len(manifest['shapes'])} shapes) in "
+              f"{train_s:.2f}s, no training")
+    else:
+        manifest = None
+        print("[serve] training cascade...")
+        t0 = time.time()
+        params, cfg = B.fit_cloes(tr, lcfg=L.LossConfig(beta=args.beta),
+                                  tcfg=T.TrainConfig(loss="l3", epochs=4,
+                                                     lr=0.01))
+        train_s = time.time() - t0
     neural = None
     if args.neural:
         ncfg = dataclasses.replace(CFG.get_smoke(args.neural),
@@ -173,15 +243,23 @@ def main() -> None:
             print(f"[serve] CHAOS MODE: rate {args.faults}"
                   + (", replica 0 FORCED DEAD" if args.kill_replica else "")
                   + f" (seed {args.seed})")
-        router = build_router(params, cfg, n=args.replicas, neural=neural,
+        router = build_router(params, cfg, lcfg, n=args.replicas,
+                              neural=neural,
                               plan=args.plan, max_queue=args.max_queue,
                               max_wait_ms=args.max_wait_ms,
                               fault_rate=args.faults,
                               kill_replica=args.kill_replica,
                               seed=args.seed)
         ses = router.replicas[0]
+        sessions = router.replicas
         t0 = time.time()
-        shapes = router.warmup()
+        if manifest is not None:
+            # warm restart: replay the restored manifest on every replica
+            # (co-located replicas share one jit cache — cache hits)
+            for r in router.replicas:
+                shapes = r.warm_restart(manifest)
+        else:
+            shapes = router.warmup()
         warmup_s = time.time() - t0
         print(f"[serve] warmed {len(shapes)} shape buckets across "
               f"{args.replicas} replicas in {warmup_s:.1f}s "
@@ -191,14 +269,17 @@ def main() -> None:
         if injector is not None:
             print(f"[serve] CHAOS MODE: fault injection at rate "
                   f"{args.faults} (seed {args.seed})")
-        ses = build_session(params, cfg, neural=neural, plan=args.plan,
+        ses = build_session(params, cfg, lcfg, neural=neural, plan=args.plan,
                             max_queue=args.max_queue,
                             max_wait_ms=args.max_wait_ms, faults=injector)
+        sessions = [ses]
         t0 = time.time()
-        shapes = ses.warmup()
+        shapes = (ses.warm_restart(manifest) if manifest is not None
+                  else ses.warmup())
         warmup_s = time.time() - t0
         print(f"[serve] warmed {len(shapes)} shape buckets in "
               f"{warmup_s:.1f}s")
+    compiled_after_warmup = compiled_count(sessions)
 
     # -- request generation, timed on its own (NOT charged to the server) --
     rng = np.random.default_rng(args.seed)
@@ -229,7 +310,9 @@ def main() -> None:
         router.attach_pumps(pumps)
         res = run_wall_clock(router, reqs, args.qps, deadline_ms=deadline,
                              n_threads=args.threads, seed=args.seed)
-        router.close()
+        # graceful shutdown (--serve-dir): drain the queues so every
+        # future resolves with a real result before state is persisted
+        router.close(drain=bool(serve_dir))
         router_stats = router.stats_export()
         unresolved_after_close = sum(1 for f in res.futures if not f.done())
         print(f"[serve] router pump mode: offered {res.offered_qps:.0f} "
@@ -241,7 +324,7 @@ def main() -> None:
         pump = SessionPump(ses).start()
         res = run_wall_clock(pump, reqs, args.qps, deadline_ms=deadline,
                              n_threads=args.threads, seed=args.seed)
-        pump.close()
+        pump.close(drain=bool(serve_dir))
         pump_stats = pump.stats_export()
         unresolved_after_close = sum(1 for f in res.futures if not f.done())
         print(f"[serve] pump mode: offered {res.offered_qps:.0f} QPS from "
@@ -253,7 +336,7 @@ def main() -> None:
     elif router is not None:
         res = run_open_loop_router(router, reqs, args.qps,
                                    deadline_ms=deadline, seed=args.seed)
-        router.close()
+        router.close(drain=bool(serve_dir))
         router_stats = router.stats_export()
         unresolved_after_close = res.unresolved
         print(f"[serve] router DES: offered {res.offered_qps:.0f} QPS over "
@@ -306,6 +389,22 @@ def main() -> None:
           "submitted = completed + shed + errors"
           + (" globally across replicas)" if router_stats else ")"))
 
+    # The warm-restart contract: every compilation the serve phase needed
+    # existed before the first live request. Measured as the jit-cache
+    # delta across the serve phase; a normal (cold-warmup) run reports
+    # the same number, the warm-restart path HARD-FAILS on it.
+    recompiles = compiled_count(sessions) - compiled_after_warmup
+    print(f"[serve] recompiles after warmup: {recompiles}")
+    if args.warm_restart and recompiles:
+        raise SystemExit(
+            f"[serve] FAIL: warm restart promised zero recompiles but the "
+            f"serve phase compiled {recompiles} new pipeline shape(s)")
+
+    if serve_dir:
+        save_serving_state(serve_dir, ses)
+        print(f"[serve] graceful shutdown: wrote serving state "
+              f"(params + warmup manifest) to {serve_dir}")
+
     if args.report:
         report = {
             "config": {"requests": args.requests, "offered_qps": args.qps,
@@ -317,7 +416,10 @@ def main() -> None:
                        "kill_replica": args.kill_replica,
                        "mode": "pump" if args.pump else "des",
                        "threads": args.threads if args.pump else None,
+                       "serve_dir": serve_dir,
+                       "warm_restart": args.warm_restart,
                        "backend": jax.default_backend()},
+            "recompiles_after_warmup": recompiles,
             "phases_s": {"train": train_s, "warmup": warmup_s,
                          "generate": gen_s, "serve": serve_s},
             "generation_rate_rps": len(reqs) / max(gen_s, 1e-9),

@@ -34,6 +34,22 @@ from repro.core import trainer as T
 from repro.data import LogConfig, generate_log
 
 
+def params_digest(params) -> str:
+    """sha256 over the params' (path, shape, bytes) in sorted-path order —
+    a stable identity for trajectory-parity checks: the CI restart smoke
+    compares this line between the resumed and uninterrupted runs."""
+    import hashlib
+
+    h = hashlib.sha256()
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in sorted(leaves, key=lambda kv: str(kv[0])):
+        a = np.asarray(jax.device_get(leaf))
+        h.update(str(path).encode())
+        h.update(str(a.shape).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
 def train_cloes(args) -> None:
     from repro.launch.mesh import data_parallel_mesh
 
@@ -46,12 +62,21 @@ def train_cloes(args) -> None:
     print(f"[train] CLOES on {len(devices)} device(s) "
           f"({shards}-way data parallel), {tr.n_instances} instances")
     t0 = time.time()
+    info: dict = {}
     params, cfg = B.fit_cloes(
         tr, lcfg=lcfg,
         tcfg=T.TrainConfig(loss="l3", epochs=args.epochs, lr=args.lr,
-                           batch_groups=args.batch_groups),
-        mesh=mesh)
-    print(f"[train] done in {time.time()-t0:.1f}s")
+                           batch_groups=args.batch_groups,
+                           checkpoint_every=args.checkpoint_every),
+        mesh=mesh,
+        checkpoint_dir=args.checkpoint_dir or None,
+        resume=args.resume,
+        crash_after_epoch=args.crash_after_epoch,
+        train_info=info)
+    restored = info.get("restored_epoch", 0)
+    print(f"[train] done in {time.time()-t0:.1f}s "
+          f"(restored_epoch={restored} epochs_run={info.get('epochs_run', args.epochs)})")
+    print(f"[train] params sha256={params_digest(params)}")
     for split, data in [("train", tr), ("test", te)]:
         m = T.evaluate(params, cfg, data, lcfg)
         print(f"[eval:{split}] " + " ".join(f"{k}={v:.4f}" for k, v in m.items()))
@@ -116,6 +141,14 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default="")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="crash-safe per-epoch checkpoints (cloes target)")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="epochs between checkpoints (with --checkpoint-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest good checkpoint")
+    ap.add_argument("--crash-after-epoch", type=int, default=None,
+                    help="test seam: hard-exit (code 9) after N epochs")
     args = ap.parse_args()
     if args.target == "cloes":
         train_cloes(args)

@@ -418,27 +418,76 @@ class CascadeSession:
                         jnp.asarray(batch["q"], jnp.float32),
                         dev(batch["mask"]), dev(batch["m_q"]))
 
+    def warmup_manifest(self) -> dict:
+        """The compilation surface of this session as a JSON-serializable
+        record: everything that determines WHICH pipelines exist and WHAT
+        shapes they were (or must be) compiled for. A graceful shutdown
+        persists this next to the params; `warm_restart` replays it so a
+        restarted server's first live request hits a warm jit cache — the
+        zero-recompile guarantee. Versioned like the checkpoint manifest
+        so a reader can refuse a future format instead of misreading it."""
+        return {
+            "version": 1,
+            "plan": self.scfg.plan,
+            "group_buckets": list(self.buckets),
+            "batch_groups": self.scfg.batch_groups,
+            "d_x": self.cfg.d_x,
+            "d_q": self.cfg.d_q,
+            "n_stages": self.cfg.n_stages,
+            # distinct skip-neural compilation to re-warm?
+            "degraded_pipeline": self._rank_noneural is not self._rank,
+            "dtype": "float32",      # the pipeline's input/compute dtype
+            "shapes": [[b, g] for g in self.buckets
+                       for b in warmup_batch_sizes(self.scfg.batch_groups)],
+        }
+
+    def warm_restart(self, manifest: dict) -> list[tuple[int, int]]:
+        """Replay a warmup manifest through the jitted pipeline(s): every
+        recorded (b, g) shape is compiled for the normal and (when the
+        manifest says one existed) the degraded skip-neural pipeline. A
+        manifest written by a session with a different compilation surface
+        (plan, dims, geometry) is rejected — warming the wrong shapes
+        would silently re-introduce first-request compiles."""
+        if manifest.get("version", 0) != 1:
+            raise ValueError(
+                f"unsupported warmup manifest version: {manifest.get('version')!r}")
+        want = {
+            "plan": self.scfg.plan, "group_buckets": list(self.buckets),
+            "batch_groups": self.scfg.batch_groups, "d_x": self.cfg.d_x,
+            "d_q": self.cfg.d_q, "n_stages": self.cfg.n_stages,
+            "dtype": "float32",
+        }
+        got = {k: manifest.get(k) for k in want}
+        if got != want:
+            raise ValueError(
+                "warmup manifest does not match this session's compilation "
+                f"surface: manifest {got} != session {want}")
+        warm_degraded = (bool(manifest.get("degraded_pipeline"))
+                         and self._rank_noneural is not self._rank)
+        shapes = []
+        for b, g in manifest["shapes"]:
+            batch = {
+                "x": np.zeros((b, g, self.cfg.d_x), np.float32),
+                "q": np.zeros((b, self.cfg.d_q), np.float32),
+                "mask": np.ones((b, g), np.float32),
+                "m_q": np.full((b,), float(g), np.float32),
+            }
+            self.rank_batch(batch)
+            if warm_degraded:
+                self.rank_batch(batch, skip_neural=True)
+            shapes.append((b, g))
+        return shapes
+
     def warmup(self) -> list[tuple[int, int]]:
         """Pre-compile the pipeline for every serving shape — each (b, g)
         with b a power of two up to batch_groups (the exact shapes
         pack_requests can emit) per bucket, for the normal AND (when
         distinct) the degraded skip-neural pipeline. After warmup, live
-        traffic — including degraded flushes — never recompiles."""
-        bs = warmup_batch_sizes(self.scfg.batch_groups)
-        shapes = []
-        for g in self.buckets:
-            for b in bs:
-                batch = {
-                    "x": np.zeros((b, g, self.cfg.d_x), np.float32),
-                    "q": np.zeros((b, self.cfg.d_q), np.float32),
-                    "mask": np.ones((b, g), np.float32),
-                    "m_q": np.full((b,), float(g), np.float32),
-                }
-                self.rank_batch(batch)
-                if self._rank_noneural is not self._rank:
-                    self.rank_batch(batch, skip_neural=True)
-                shapes.append((b, g))
-        return shapes
+        traffic — including degraded flushes — never recompiles.
+        Implemented as a warm restart from this session's own manifest:
+        cold start and warm restart are ONE code path, so the manifest can
+        never drift from what warmup actually compiles."""
+        return self.warm_restart(self.warmup_manifest())
 
     # -- request lifecycle -------------------------------------------------
 

@@ -6,13 +6,10 @@ import time
 from functools import lru_cache
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines as B
-from repro.core import cascade as C
 from repro.core import losses as L
-from repro.core import metrics as M
 from repro.core import trainer as T
 from repro.data import generate_log, LogConfig
 

@@ -17,8 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_split, emit, trained_cloes
-from repro.core import losses as L
-from repro.core import trainer as T
 
 
 def _cost_per_query(params, cfg, te):

@@ -21,6 +21,31 @@ phase_done() {            # phase_done <name> -> echoes + returns elapsed
     PHASE_ELAPSED=$dt
 }
 
+echo "== cascade-lint: static serving-invariant gate (budget ${LINT_BUDGET:-60} s) =="
+# AST-only (no jax import): lock discipline, recompile hygiene,
+# determinism, containment seams, stats accounting — rule ids CL001-CL011,
+# see README "Static analysis". Runs first: findings carry file:line and
+# are cheaper to fix than a test failure is to debug.
+rm -f ANALYSIS_report.json
+timeout "${LINT_TIMEOUT:-60}" python -m repro.analysis
+test -s ANALYSIS_report.json || { echo "ANALYSIS_report.json missing"; exit 1; }
+phase_done "cascade-lint"
+if (( PHASE_ELAPSED > ${LINT_BUDGET:-60} )); then
+    echo "FAIL: cascade-lint took ${PHASE_ELAPSED} s > ${LINT_BUDGET:-60} s budget" >&2
+    exit 1
+fi
+
+echo "== ruff (best-effort): unused imports / f-string misuse =="
+# scoped by ruff.toml to the mechanical rules cascade-lint does not cover.
+# Best-effort like the pytest-cov leg: CI installs ruff and enforces; a
+# dev container without it falls back to a note, never to a hard fail.
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests scripts benchmarks
+    phase_done "ruff"
+else
+    echo "   ruff not installed — skipping (CI enforces this leg)"
+fi
+
 echo "== fast loop: pytest -m 'not slow' (budget ${FAST_BUDGET:-90} s) =="
 timeout "${FAST_TIMEOUT:-300}" python -m pytest -q -m "not slow"
 phase_done "fast loop"
@@ -132,24 +157,27 @@ test -s BENCH_restart.json || { echo "BENCH_restart.json missing"; exit 1; }
 phase_done "warm-restart smoke"
 
 echo "== serving coverage gate: src/repro/serving floor =="
-# floor grounded at measured-minus-2% (stdlib-trace measurement: 76.5% on
-# the fast serving selection). pytest-cov, when installed (CI), measures
-# with coverage.py whose statement accounting differs slightly — its
-# floor carries a 2-point tool allowance. Either way the gate RUNS; a dev
-# container without pytest-cov falls back to the stdlib tracer, not to
-# skipping. COVERAGE_serving.json is the artifact either way.
+# floor grounded at measured-minus-2% (stdlib-trace measurement: 81.3% on
+# the fast serving selection — engine.py joined the denominator with real
+# coverage once tests/test_engine.py landed; its moe/ssm/hybrid/encdec
+# paths stay on the slow-marked test_arch_smoke sweep). pytest-cov, when
+# installed (CI), measures with coverage.py whose statement accounting
+# differs slightly — its floor carries a 2-point tool allowance. Either
+# way the gate RUNS; a dev container without pytest-cov falls back to the
+# stdlib tracer, not to skipping. COVERAGE_serving.json is the artifact
+# either way.
 rm -f COVERAGE_serving.json
 if python -c "import pytest_cov" 2>/dev/null; then
     timeout "${COV_TIMEOUT:-600}" python -m pytest -q -m "not slow" \
         --cov=repro.serving --cov-report=term \
         --cov-report=json:COVERAGE_serving.json \
-        --cov-fail-under="${COV_FLOOR:-72}" \
+        --cov-fail-under="${COV_FLOOR:-77}" \
         tests/test_serving_batching.py tests/test_session.py \
         tests/test_faults.py tests/test_pump.py tests/test_router.py \
         tests/test_determinism.py tests/test_arch_smoke.py \
-        tests/test_checkpoint.py
+        tests/test_checkpoint.py tests/test_engine.py
 else
-    COV_FLOOR="${COV_FLOOR:-74}" timeout "${COV_TIMEOUT:-600}" \
+    COV_FLOOR="${COV_FLOOR:-79}" timeout "${COV_TIMEOUT:-600}" \
         python scripts/measure_serving_cov.py
 fi
 test -s COVERAGE_serving.json || { echo "COVERAGE_serving.json missing"; exit 1; }

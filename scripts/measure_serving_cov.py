@@ -29,13 +29,15 @@ TARGET = os.path.join(_ROOT, "src", "repro", "serving") + os.sep
 _NEEDLE = os.path.join("repro", "serving") + os.sep
 
 # the serving surface's tests, fast loop only — mirror scripts/ci.sh
-# (test_arch_smoke covers serving/engine.py, the neural-arch decode side;
-# test_checkpoint covers the warm-restart seam and the fs-fault injector)
+# (test_engine is the fast prefill/decode leg for serving/engine.py, whose
+# full numerical sweep in test_arch_smoke is slow-marked; test_checkpoint
+# covers the warm-restart seam and the fs-fault injector)
 DEFAULT_ARGS = ["-q", "-m", "not slow",
                 "tests/test_serving_batching.py", "tests/test_session.py",
                 "tests/test_faults.py", "tests/test_pump.py",
                 "tests/test_router.py", "tests/test_determinism.py",
-                "tests/test_arch_smoke.py", "tests/test_checkpoint.py"]
+                "tests/test_arch_smoke.py", "tests/test_checkpoint.py",
+                "tests/test_engine.py"]
 
 _executed: dict[str, set[int]] = {}
 

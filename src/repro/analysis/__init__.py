@@ -1,0 +1,51 @@
+"""cascade-lint: static-analysis gate for the serving stack's invariants.
+
+The serving stack's correctness rests on rules the language cannot express:
+the pump's pack/execute seam must stay outside ``session.lock`` (bounded
+latency), every live batch shape must come from the warmed pow2 ladder
+(zero-recompile guarantee), randomness must be seeded and clocks monotonic
+(reproducible offline evaluation), and every admitted request must end in
+exactly one terminal state (lifecycle accounting).  PRs 6-9 each shipped
+regression tests for violations of these rules found after the fact; this
+package checks them before the code runs.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis                 # whole tree
+    PYTHONPATH=src python -m repro.analysis path/to/file.py # explicit paths
+
+Rule ids (CL = cascade-lint):
+
+=======  ==================================================================
+CL001    blocking/compute call inside a ``with <x>.lock`` body
+CL002    cycle in the static lock-acquisition-order graph
+CL003    ``jax.jit`` / ``pallas_call`` in function scope outside blessed
+         pipeline/warmup modules
+CL004    ad-hoc construction of the staging-batch layout outside the
+         bucket/warmup code
+CL005    wall-clock read (``time.time`` / ``datetime.now``) in src/repro
+CL006    unseeded RNG (``default_rng()`` with no seed, ``random.*``,
+         legacy ``np.random.*`` globals)
+CL007    broad ``except Exception`` outside an allow-listed containment
+         seam
+CL008    function constructs a ``RankFuture`` without reaching a
+         resolution path
+CL009    stats counter mutated but never declared in the class's stats
+         literal
+CL010    declared stats counter not covered by ``stats_export()``
+CL011    lifecycle-identity key missing from the accounting identity
+=======  ==================================================================
+
+The runtime half lives in :mod:`repro.analysis.witness`: a lock-order
+witness installed by a conftest fixture for the serving test selection,
+which records actual acquisition orders and fails on inversions the static
+graph cannot see (dynamic dispatch, callbacks).
+"""
+from repro.analysis.core import (  # noqa: F401
+    Finding,
+    ParsedFile,
+    collect_files,
+    default_targets,
+    run,
+    write_report,
+)

@@ -1,0 +1,77 @@
+"""CL005/CL006 — determinism lint: monotonic clocks, seeded randomness.
+
+Reproducible offline evaluation (the paper's offline/online comparison
+protocol) requires that a replayed trace produce byte-identical decisions.
+Two leak paths:
+
+CL005 (wall-clock): ``time.time()`` / ``datetime.now()`` readings differ
+across runs and hosts.  Elapsed-time measurement uses
+``time.perf_counter``; scheduling inside the serving stack flows through
+the pump seam's injected clock (``time.monotonic``) so tests can replay
+it.
+
+CL006 (unseeded-rng): ``np.random.default_rng()`` with no seed, the
+legacy ``np.random.*`` global generators, and module-level ``random.*``
+draw from ambient process state.  Randomness enters through seeded
+constructors only.
+
+Scope: ``src/repro`` only — tests may freely read wall clocks.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ParsedFile, dotted_name
+
+RULES = {
+    "CL005": "wall-clock read (time.time/datetime.now) in src/repro",
+    "CL006": "unseeded RNG (default_rng(), random.*, np.random globals)",
+}
+
+_WALL_CLOCK = {"time.time", "datetime.now", "datetime.datetime.now",
+               "datetime.utcnow", "datetime.datetime.utcnow"}
+
+# np.random attributes that are NOT the seeded-generator API
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                 "Philox", "BitGenerator"}
+
+
+def check(files: list[ParsedFile]) -> list[Finding]:
+    files = [pf for pf in files
+             if pf.rel.startswith("src/repro/analysis/fixtures")
+             or (pf.rel.startswith("src/repro")
+                 and not pf.rel.startswith("src/repro/analysis"))]
+    findings: list[Finding] = []
+    for pf in files:
+        for node in ast.walk(pf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if not name:
+                continue
+            if name in _WALL_CLOCK:
+                findings.append(Finding(
+                    "CL005", pf.rel, node.lineno,
+                    f"`{name}()` reads the wall clock — use "
+                    "time.perf_counter for elapsed time or the pump "
+                    "seam's injected monotonic clock for scheduling"))
+            parts = name.split(".")
+            if name == "np.random.default_rng" \
+                    or name == "numpy.random.default_rng":
+                if not node.args and not node.keywords:
+                    findings.append(Finding(
+                        "CL006", pf.rel, node.lineno,
+                        "`default_rng()` without a seed draws from OS "
+                        "entropy — thread the config seed through"))
+            elif parts[:2] in (["np", "random"], ["numpy", "random"]) \
+                    and len(parts) == 3 and parts[2] not in _NP_RANDOM_OK:
+                findings.append(Finding(
+                    "CL006", pf.rel, node.lineno,
+                    f"legacy global `{name}` shares hidden process state "
+                    "— use a seeded np.random.default_rng(seed)"))
+            elif len(parts) == 2 and parts[0] == "random":
+                findings.append(Finding(
+                    "CL006", pf.rel, node.lineno,
+                    f"stdlib `{name}` draws from the global RNG — use a "
+                    "seeded np.random.default_rng(seed)"))
+    return findings

@@ -1,0 +1,8 @@
+"""Seeded CL003: jax.jit constructed per call, outside the blessed
+pipeline/warmup modules — a fresh compilation cache every invocation."""
+import jax
+
+
+def rank_once(params, batch):
+    step = jax.jit(lambda p, b: p["w"] @ b["x"])   # CL003
+    return step(params, batch)

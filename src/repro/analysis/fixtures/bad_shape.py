@@ -1,0 +1,10 @@
+"""Seeded CL004: hand-rolled staging-batch dict with the exact
+{"x","q","mask","m_q"} layout outside the bucket/warmup code."""
+import numpy as np
+
+
+def handmade_batch(b, g, d_x, d_q):
+    return {"x": np.zeros((b, g, d_x), np.float32),    # CL004
+            "q": np.zeros((b, d_q), np.float32),
+            "mask": np.zeros((b, g), np.float32),
+            "m_q": np.ones((b,), np.float32)}

@@ -1,0 +1,241 @@
+"""CL001/CL002 — lock discipline for the serving stack.
+
+CL001 (lock-blocking-call): the pump's bounded-latency contract is that
+claiming work happens under ``session.lock`` while packing/executing/
+blocking happens OUTSIDE it.  Any blocking or compute call inside a
+``with <x>.lock`` / ``with <x>._lock`` body stalls every other thread
+contending for that lock (admission, slot-join, stats readers).
+
+CL002 (lock-order-cycle): a static acquisition-order graph over the
+serving locks (``session.lock``, ``router._lock``,
+``TransferBufferPool._lock``, injector locks).  Nested acquisitions and
+one level of call resolution produce edges; any cycle is a potential
+deadlock.  ``session.lock`` is an RLock, so session->session
+reacquisition (pump.submit -> session.submit) is legal and exempt.
+
+Scope: ``src/repro`` only — test doubles build whatever lock shapes the
+scenario needs (including deliberate inversions for the runtime witness
+test) and are not part of the serving stack's lock universe.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ParsedFile, dotted_name, \
+    iter_functions
+
+RULES = {
+    "CL001": "blocking/compute call inside a with-lock body",
+    "CL002": "cycle in the static lock-acquisition-order graph",
+}
+
+# Calls that block or do batch compute; none may run under a serving lock.
+# `.join` is only flagged with zero positional args (``t.join()``), which
+# separates Thread.join from the ubiquitous ``", ".join(parts)``.
+BLOCKED_ATTRS = {
+    "result", "wait", "sleep", "_sleep", "join",
+    "pack_chunk", "execute_chunk", "pack_requests", "rank_batch",
+    "_execute_attempt", "_execute_with_retry", "run_chunk",
+    "warmup", "warm_restart",
+}
+
+# Canonical lock-node names for the serving classes...
+_CLASS_NODE = {
+    "CascadeSession": "session",
+    "SessionPump": "pump",
+    "ReplicaRouter": "router",
+    "TransferBufferPool": "pool",
+    "RequestBatcher": "pool",
+    "FaultInjector": "injector",
+    "FsFaultInjector": "injector",
+}
+# ... and for the receiver names the serving modules conventionally use.
+_TOKEN_NODE = {
+    "session": "session", "ses": "session", "replica": "session",
+    "r": "session",
+    "pump": "pump", "p": "pump",
+    "router": "router",
+    "pool": "pool", "batcher": "pool",
+    "injector": "injector", "inj": "injector", "faults": "injector",
+}
+
+# RLocks: same-lock reacquisition on one thread is legal, not an edge.
+REENTRANT = {"session"}
+
+
+def _lock_node(expr: ast.AST, cls: str | None) -> str | None:
+    """Map a with-item expression to a lock-node name, or None when the
+    expression is not a lock acquisition we track."""
+    chain = dotted_name(expr)
+    if not chain:
+        return None
+    parts = chain.split(".")
+    if parts[-1] not in ("lock", "_lock"):
+        return None
+    recv = parts[:-1]
+    if recv == ["self"]:
+        return _CLASS_NODE.get(cls or "", (cls or "module").lower())
+    token = recv[-1]
+    return _TOKEN_NODE.get(token, token)
+
+
+def _recv_node(expr: ast.AST, cls: str | None) -> str | None:
+    """Resolve a call receiver (``self.session`` / ``ses`` / ``pool``) to
+    a lock-node name."""
+    chain = dotted_name(expr)
+    if not chain:
+        return None
+    parts = chain.split(".")
+    if parts == ["self"]:
+        return _CLASS_NODE.get(cls or "", (cls or "module").lower())
+    token = parts[-1]
+    return _TOKEN_NODE.get(token)
+
+
+def _is_blocking(call: ast.Call) -> bool:
+    if not isinstance(call.func, ast.Attribute):
+        return False
+    attr = call.func.attr
+    if attr not in BLOCKED_ATTRS:
+        return False
+    if attr == "join" and call.args:
+        return False  # ", ".join(parts) — string formatting, not a thread
+    return True
+
+
+def _walk_no_nested_defs(node: ast.AST):
+    """Walk an AST subtree without descending into nested function/class
+    definitions — a closure defined under a lock does not run there."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def check(files: list[ParsedFile]) -> list[Finding]:
+    files = [pf for pf in files
+             if pf.rel.startswith("src/repro/analysis/fixtures")
+             or (pf.rel.startswith("src/repro")
+                 and not pf.rel.startswith("src/repro/analysis"))]
+    findings: list[Finding] = []
+
+    # Pass 1: which locks does each (node, method) acquire directly?
+    method_locks: dict[tuple[str, str], set[str]] = {}
+    for pf in files:
+        for qual, cls, fn in iter_functions(pf.tree):
+            if cls is None:
+                continue
+            node = _CLASS_NODE.get(cls)
+            if node is None:
+                continue
+            acquired = {
+                ln for stmt in ast.walk(fn) if isinstance(stmt, ast.With)
+                for item in stmt.items
+                if (ln := _lock_node(item.context_expr, cls)) is not None
+            }
+            if acquired:
+                key = (node, fn.name)
+                method_locks.setdefault(key, set()).update(acquired)
+
+    # Pass 2: blocking calls under locks + acquisition-order edges.
+    edges: dict[tuple[str, str], tuple[str, int]] = {}
+
+    def visit_body(stmts, held: list[str], pf: ParsedFile,
+                   cls: str | None) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, ast.With):
+                new = [ln for item in stmt.items
+                       if (ln := _lock_node(item.context_expr, cls))]
+                for ln in new:
+                    for h in held:
+                        if h == ln and ln in REENTRANT:
+                            continue
+                        edges.setdefault((h, ln), (pf.rel, stmt.lineno))
+                visit_body(stmt.body, held + new, pf, cls)
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if held:
+                # scan only the expressions attached to THIS statement;
+                # nested statement bodies are handled by the recursion
+                # below so each call is inspected exactly once
+                for child in ast.iter_child_nodes(stmt):
+                    if not isinstance(child, ast.expr):
+                        continue
+                    for sub in [child, *_walk_no_nested_defs(child)]:
+                        if not isinstance(sub, ast.Call):
+                            continue
+                        if _is_blocking(sub):
+                            findings.append(Finding(
+                                "CL001", pf.rel, sub.lineno,
+                                f"`{dotted_name(sub.func)}()` blocks inside "
+                                f"a `with {held[-1]}` body — claim under "
+                                "the lock, pack/execute/wait outside it"))
+                        # one level of call resolution: a receiver method
+                        # that itself takes a lock extends the edge graph
+                        if isinstance(sub.func, ast.Attribute):
+                            recv = _recv_node(sub.func.value, cls)
+                            if recv is not None:
+                                for ln in method_locks.get(
+                                        (recv, sub.func.attr), ()):
+                                    for h in held:
+                                        if h == ln and ln in REENTRANT:
+                                            continue
+                                        edges.setdefault(
+                                            (h, ln), (pf.rel, sub.lineno))
+            # recurse into compound statements to track nested withs
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, field, None)
+                if sub:
+                    visit_body(sub, held, pf, cls)
+            for h in getattr(stmt, "handlers", []):
+                visit_body(h.body, held, pf, cls)
+
+    for pf in files:
+        for qual, cls, fn in iter_functions(pf.tree):
+            visit_body(fn.body, [], pf, cls)
+
+    # Cycle detection over the edge graph (self-loops on non-reentrant
+    # locks arrive here as (A, A) edges and form length-1 cycles).
+    adj: dict[str, list[str]] = {}
+    for a, b in edges:
+        adj.setdefault(a, []).append(b)
+
+    def find_cycle() -> list[str] | None:
+        WHITE, GREY, BLACK = 0, 1, 2
+        color = {n: 0 for n in adj}
+        path: list[str] = []
+
+        def dfs(n: str) -> list[str] | None:
+            color[n] = GREY
+            path.append(n)
+            for m in adj.get(n, ()):
+                if color.get(m, WHITE) == GREY:
+                    return path[path.index(m):] + [m]
+                if color.get(m, WHITE) == WHITE:
+                    cyc = dfs(m)
+                    if cyc:
+                        return cyc
+            path.pop()
+            color[n] = BLACK
+            return None
+
+        for n in list(adj):
+            if color.get(n, WHITE) == WHITE:
+                cyc = dfs(n)
+                if cyc:
+                    return cyc
+        return None
+
+    cyc = find_cycle()
+    if cyc:
+        closing = edges.get((cyc[-2], cyc[-1])) or next(iter(edges.values()))
+        findings.append(Finding(
+            "CL002", closing[0], closing[1],
+            "lock-order cycle " + " -> ".join(cyc)
+            + " — two threads taking these locks in opposite order deadlock"))
+    return findings

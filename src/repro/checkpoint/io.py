@@ -45,6 +45,7 @@ from __future__ import annotations
 import io
 import json
 import os
+import zipfile
 import zlib
 from pathlib import Path
 
@@ -212,7 +213,9 @@ def _load(base: Path, fs_faults=None) -> tuple[object, dict | None]:
     raw = _read_bytes(man_path, fs_faults)      # FileNotFoundError -> caller
     try:
         man = json.loads(raw.decode())
-    except Exception as e:
+    except ValueError as e:
+        # json.JSONDecodeError and UnicodeDecodeError are both ValueError —
+        # the only failure modes of decoding bytes we already read in full
         raise CheckpointCorrupt(f"manifest {man_path.name} unreadable: {e}")
     if not isinstance(man, dict) or man.get("format") != FORMAT:
         raise CheckpointCorrupt(
@@ -235,7 +238,11 @@ def _load(base: Path, fs_faults=None) -> tuple[object, dict | None]:
     try:
         with np.load(io.BytesIO(npz_raw), allow_pickle=False) as data:
             arrays = {k: data[k] for k in data.files}
-    except Exception as e:
+    except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
+        # np.load failure modes on in-memory corrupt bytes: bad npy magic /
+        # header (ValueError), zip directory or member CRC damage
+        # (BadZipFile), a member the header promised but the zip lacks
+        # (KeyError), stream errors (OSError)
         raise CheckpointCorrupt(f"arrays file {npz_path.name} unreadable: {e}")
     tree = _decode(man["spec"], arrays, man["arrays"])
     return tree, man.get("meta")

@@ -16,14 +16,13 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cascade as C
 from repro.core import losses as L
 from repro.core import metrics as M
-from repro.core.trainer import TrainConfig, fit, evaluate
+from repro.core.trainer import TrainConfig, fit
 from repro.data import features as F
 from repro.data.synthetic import SearchLog
 

@@ -15,7 +15,6 @@ more complicated features ... can be more accurate but more expensive").
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 

@@ -163,17 +163,17 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             out_dir: Path = DEFAULT_OUT, variant: str = "baseline") -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = 512 if multi_pod else 256
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered, meta = lower_one(arch, shape_name, mesh, variant=variant)
     rec = dict(meta, multi_pod=multi_pod, n_chips=n_chips, variant=variant)
     if lowered is None:
         rec["status"] = "skipped"
         _save(rec, arch, shape_name, multi_pod, out_dir)
         return rec
-    rec["lower_s"] = round(time.time() - t0, 1)
-    t1 = time.time()
+    rec["lower_s"] = round(time.perf_counter() - t0, 1)
+    t1 = time.perf_counter()
     compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t1, 1)
+    rec["compile_s"] = round(time.perf_counter() - t1, 1)
     mem = compiled.memory_analysis()
     rec["memory"] = {
         k: int(getattr(mem, k, 0)) for k in
@@ -244,7 +244,12 @@ def main():
                 print(f"[ ok ] {tag}: compile {rec['compile_s']}s "
                       f"flops {rec['cost'].get('flops', 0):.3e} "
                       f"coll {rec['collectives'].get('total_bytes', 0):.3e}B")
-        except Exception as ex:                        # noqa: BLE001
+        except (OSError, ValueError, KeyError, TypeError,
+                RuntimeError, NotImplementedError) as ex:
+            # the concrete classes a combo failure actually raises: config
+            # lookup (KeyError/ValueError), template/shape bugs
+            # (TypeError/ValueError), XLA lowering/compile errors
+            # (RuntimeError incl. XlaRuntimeError), report IO (OSError)
             failures += 1
             print(f"[FAIL] {tag}: {type(ex).__name__}: {str(ex)[:400]}")
             traceback.print_exc(limit=3)

@@ -214,20 +214,20 @@ def main() -> None:
     tr, te = log.split(0.8)
     lcfg = None             # session default unless a restore overrides it
     if args.warm_restart:
-        t0 = time.time()
+        t0 = time.perf_counter()
         params, cfg, lcfg, manifest = load_serving_state(serve_dir)
-        train_s = time.time() - t0
+        train_s = time.perf_counter() - t0
         print(f"[serve] warm restart from {serve_dir}: restored params + "
               f"manifest ({len(manifest['shapes'])} shapes) in "
               f"{train_s:.2f}s, no training")
     else:
         manifest = None
         print("[serve] training cascade...")
-        t0 = time.time()
+        t0 = time.perf_counter()
         params, cfg = B.fit_cloes(tr, lcfg=L.LossConfig(beta=args.beta),
                                   tcfg=T.TrainConfig(loss="l3", epochs=4,
                                                      lr=0.01))
-        train_s = time.time() - t0
+        train_s = time.perf_counter() - t0
     neural = None
     if args.neural:
         ncfg = dataclasses.replace(CFG.get_smoke(args.neural),
@@ -252,7 +252,7 @@ def main() -> None:
                               seed=args.seed)
         ses = router.replicas[0]
         sessions = router.replicas
-        t0 = time.time()
+        t0 = time.perf_counter()
         if manifest is not None:
             # warm restart: replay the restored manifest on every replica
             # (co-located replicas share one jit cache — cache hits)
@@ -260,7 +260,7 @@ def main() -> None:
                 shapes = r.warm_restart(manifest)
         else:
             shapes = router.warmup()
-        warmup_s = time.time() - t0
+        warmup_s = time.perf_counter() - t0
         print(f"[serve] warmed {len(shapes)} shape buckets across "
               f"{args.replicas} replicas in {warmup_s:.1f}s "
               "(co-located replicas share one jit cache)")
@@ -273,10 +273,10 @@ def main() -> None:
                             max_queue=args.max_queue,
                             max_wait_ms=args.max_wait_ms, faults=injector)
         sessions = [ses]
-        t0 = time.time()
+        t0 = time.perf_counter()
         shapes = (ses.warm_restart(manifest) if manifest is not None
                   else ses.warmup())
-        warmup_s = time.time() - t0
+        warmup_s = time.perf_counter() - t0
         print(f"[serve] warmed {len(shapes)} shape buckets in "
               f"{warmup_s:.1f}s")
     compiled_after_warmup = compiled_count(sessions)
@@ -284,7 +284,7 @@ def main() -> None:
     # -- request generation, timed on its own (NOT charged to the server) --
     rng = np.random.default_rng(args.seed)
     n_te = te.x.shape[0]
-    t0 = time.time()
+    t0 = time.perf_counter()
     reqs = []
     for i in range(args.requests):
         qi = int(rng.integers(0, n_te))
@@ -293,7 +293,7 @@ def main() -> None:
             request_id=i, q_feat=te.q[qi].astype(np.float32),
             item_feats=te.x[qi, :n_items].astype(np.float32),
             m_q=int(te.m_q[qi])))
-    gen_s = time.time() - t0
+    gen_s = time.perf_counter() - t0
     if not reqs:
         print("[serve] no requests submitted — nothing to report")
         return

@@ -13,12 +13,10 @@ Two built-in rule sets:
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
-from repro.models.base import logical_specs
 
 TP_RULES = {
     "qout": "model",

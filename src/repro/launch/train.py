@@ -26,7 +26,6 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from repro.core import baselines as B
 from repro.core import losses as L
@@ -61,7 +60,7 @@ def train_cloes(args) -> None:
     shards = mesh.shape["data"] if mesh is not None else 1
     print(f"[train] CLOES on {len(devices)} device(s) "
           f"({shards}-way data parallel), {tr.n_instances} instances")
-    t0 = time.time()
+    t0 = time.perf_counter()
     info: dict = {}
     params, cfg = B.fit_cloes(
         tr, lcfg=lcfg,
@@ -74,7 +73,7 @@ def train_cloes(args) -> None:
         crash_after_epoch=args.crash_after_epoch,
         train_info=info)
     restored = info.get("restored_epoch", 0)
-    print(f"[train] done in {time.time()-t0:.1f}s "
+    print(f"[train] done in {time.perf_counter()-t0:.1f}s "
           f"(restored_epoch={restored} epochs_run={info.get('epochs_run', args.epochs)})")
     print(f"[train] params sha256={params_digest(params)}")
     for split, data in [("train", tr), ("test", te)]:
@@ -105,7 +104,7 @@ def train_lm(args) -> None:
     rng = np.random.default_rng(args.seed)
     bsz, s = args.batch, args.seq
     step_fn = jax.jit(lambda p, o, b: Z.train_step(p, o, b, cfg, opt.update))
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(args.steps):
         tok = rng.integers(0, cfg.vocab, (bsz, s + 1))
         batch = {"tokens": jnp.asarray(tok[:, :-1]),
@@ -122,7 +121,7 @@ def train_lm(args) -> None:
         params, opt_state, loss = step_fn(params, opt_state, batch)
         if step % max(1, args.steps // 10) == 0:
             print(f"  step {step:4d} loss {float(loss):.4f} "
-                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+                  f"({(time.perf_counter()-t0)/(step+1):.2f}s/step)")
     print(f"[train] final loss {float(loss):.4f}")
 
 

@@ -15,7 +15,7 @@ for compiling 62-layer models with 512 virtual devices on one CPU host.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

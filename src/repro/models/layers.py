@@ -9,7 +9,6 @@ Pure functions over explicit parameter dicts. Conventions:
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -18,8 +18,6 @@ threaded through the scan as xs/ys.
 
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Any
 
 import jax

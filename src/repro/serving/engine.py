@@ -16,7 +16,6 @@ Shapes (M = max cache length):
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

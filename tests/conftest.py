@@ -28,6 +28,33 @@ def pytest_configure(config):
         "them — see ROADMAP.md 'Verification loops'")
 
 
+# The serving test selection runs under the runtime lock-order witness
+# (repro.analysis.witness): every lock the serving classes construct is
+# wrapped in a recording proxy, and an acquisition order that closes a
+# cycle — the deadlock precondition — fails the test at teardown even when
+# the unlucky interleaving never happened. This is the dynamic half of the
+# static CL002 graph (python -m repro.analysis), catching orders built
+# through dynamic dispatch (depth_fn, injected clocks) the AST cannot see.
+_WITNESS_MODULES = {
+    "test_session", "test_pump", "test_router", "test_faults",
+    "test_determinism", "test_serving_batching",
+}
+
+
+@pytest.fixture(autouse=True)
+def _lock_order_witness(request):
+    if getattr(request.module, "__name__", "") not in _WITNESS_MODULES:
+        yield
+        return
+    from repro.analysis.witness import install_witness
+    witness, uninstall = install_witness()
+    try:
+        yield witness
+        witness.assert_clean()
+    finally:
+        uninstall()
+
+
 @pytest.fixture(scope="session")
 def small_log():
     return generate_log(LogConfig(n_queries=300, items_per_query=32, seed=11))

@@ -8,8 +8,6 @@ kill-and-resume training, and the serving warmup-manifest round trip
 (warm restart = zero recompiles)."""
 
 import json
-import zlib
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

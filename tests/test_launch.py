@@ -3,7 +3,6 @@ input specs, and the request batcher. Single-device safe (no mesh state)."""
 
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as PS
 
 import repro.configs as CFG
 from repro.configs import shapes as SH

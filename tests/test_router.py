@@ -5,7 +5,6 @@ unresolved futures, zero recompiles, FIFO seniority preserved — while
 failover=False reproduces the pre-fix stranded-backlog failure mode),
 probe re-admission, and the wall-clock pump-mode soak."""
 
-import threading
 
 import jax
 import numpy as np

@@ -12,7 +12,6 @@ import repro.configs as CFG
 from repro.core import baselines as B
 from repro.core import cascade as C
 from repro.core import losses as L
-from repro.core import metrics as M
 from repro.core import trainer as T
 from repro.data import LogConfig, generate_log
 from repro.serving.batching import RankRequest
